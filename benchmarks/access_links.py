@@ -1,0 +1,37 @@
+"""Fig. 3a/3b: effect of access link capacity on cycle time (Géant).
+
+3a: all access links swept together — for slow links the RING/dMBST
+    (degree-bounded) overlays dominate; the paper's closed form says
+    RING is up to 2N x faster than STAR.
+3b: the STAR center keeps a 10 Gbps link while the rest are swept —
+    STAR improves but stays ~2x slower than RING."""
+
+from __future__ import annotations
+
+from .common import cycle_times_for_network
+
+
+CAPS = (0.1, 0.5, 1.0, 2.0, 6.0, 10.0)
+
+
+def run() -> None:
+    print("# Fig 3a — Géant, all access links at capacity C (ms)")
+    print(f"{'C(Gbps)':>8s} {'STAR':>9s} {'MATCHA+':>9s} {'MST':>9s} {'dMBST':>9s} {'RING':>9s} {'star/ring':>10s}")
+    for cap in CAPS:
+        ct = cycle_times_for_network("geant", access_gbps=cap)
+        print(f"{cap:8.1f} {ct['star']:9.0f} {ct['matcha+']:9.0f} {ct['mst']:9.0f} "
+              f"{ct['delta_mbst']:9.0f} {ct['ring']:9.0f} {ct['star']/ct['ring']:10.1f}")
+    print()
+    print("# Fig 3b — Géant, center keeps 10 Gbps, others at C (ms)")
+    print(f"{'C(Gbps)':>8s} {'STAR':>9s} {'MST':>9s} {'dMBST':>9s} {'RING':>9s} {'star/ring':>10s}")
+    for cap in CAPS:
+        ct = cycle_times_for_network("geant", access_gbps=cap,
+                                     center_access_gbps=10.0,
+                                     overlays=("star", "mst", "delta_mbst", "ring"))
+        print(f"{cap:8.1f} {ct['star']:9.0f} {ct['mst']:9.0f} "
+              f"{ct['delta_mbst']:9.0f} {ct['ring']:9.0f} {ct['star']/ct['ring']:10.1f}")
+    print()
+
+
+if __name__ == "__main__":
+    run()

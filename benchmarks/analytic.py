@@ -1,0 +1,51 @@
+"""Appendix B closed forms, validated against the max-plus machinery on a
+synthetic homogeneous network (slow identical access links C, negligible
+latency/computation):
+
+    tau_RING  = M/C
+    tau_STAR  = 2N * M/C
+    tau_MATCHA+ >= C_b * max_degree(G_u) * M/C
+"""
+
+from __future__ import annotations
+
+import repro.core as C
+from repro.core.delays import ConnectivityGraph, SiloParams, TrainingParams
+
+
+def homogeneous_gc(n: int, access_gbps: float) -> ConnectivityGraph:
+    lat = {}
+    bw = {}
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                lat[(i, j)] = 0.0
+                bw[(i, j)] = 1e6  # core unconstrained
+    params = {i: SiloParams(0.0, access_gbps, access_gbps) for i in range(n)}
+    return ConnectivityGraph(tuple(range(n)), lat, bw, params)
+
+
+def run() -> None:
+    n = 16
+    cap = 0.1  # Gbps — slow access links
+    M = 42.88  # Mbits
+    gc = homogeneous_gc(n, cap)
+    tp = TrainingParams(model_size_mbits=M, local_steps=0)
+    mc = M / cap  # ms
+
+    ring = C.ring_overlay(gc, tp).cycle_time_ms
+    star = C.star_overlay(gc, tp, center=0).cycle_time_ms
+    print("# Appendix B closed forms (homogeneous slow access links)")
+    print(f"ring: computed {ring:9.1f} ms   analytic M/C      = {mc:9.1f}")
+    # star center serves n-1 leaves in both directions
+    star_pred = 2 * (n - 1) * mc
+    print(f"star: computed {star:9.1f} ms   analytic 2(N-1)M/C = {star_pred:9.1f}")
+    assert abs(ring - mc) / mc < 0.05, "ring closed form violated"
+    assert abs(star - star_pred) / star_pred < 0.05, "star closed form violated"
+    ratio = star / ring
+    print(f"star/ring = {ratio:.1f}  (paper: up to 2N = {2 * n})")
+    print()
+
+
+if __name__ == "__main__":
+    run()

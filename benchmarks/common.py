@@ -1,0 +1,58 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import repro.core as C
+
+# Table 3 reference values (ms): STAR, MATCHA+, MST, dMBST, RING
+PAPER_TABLE3 = {
+    "gaia": (391, 228, 138, 138, 118),
+    "aws_na": (288, 124, 90, 90, 81),
+    "geant": (634, 106, 101, 101, 109),
+    "exodus": (912, 142, 145, 145, 103),
+    "ebone": (902, 123, 122, 122, 95),
+}
+
+
+def cycle_times_for_network(
+    name: str,
+    workload: str = "inaturalist",
+    *,
+    core_gbps: float = 1.0,
+    access_gbps: float = 10.0,
+    local_steps: int = 1,
+    center_access_gbps: Optional[float] = None,
+    matcha_budget: float = 0.5,
+    matcha_rounds: int = 150,
+    overlays=("star", "matcha+", "mst", "delta_mbst", "ring"),
+) -> Dict[str, float]:
+    M, Tc = C.WORKLOADS[workload]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=local_steps)
+    u = C.make_underlay(name, core_capacity_gbps=core_gbps,
+                        access_capacity_gbps=access_gbps)
+    per_silo_access = None
+    center = u.load_centrality_center()
+    if center_access_gbps is not None:
+        per_silo_access = {center: center_access_gbps}
+    gc = u.connectivity_graph(comp_time_ms=Tc,
+                              per_silo_access_gbps=per_silo_access)
+    out: Dict[str, float] = {}
+    for kind in overlays:
+        if kind == "matcha+":
+            m = C.matcha_plus_from_underlay(u, matcha_budget)
+            out[kind] = m.average_cycle_time(gc, tp, rounds=matcha_rounds)
+        elif kind == "matcha":
+            m = C.matcha_from_connectivity(gc, matcha_budget)
+            out[kind] = m.average_cycle_time(gc, tp, rounds=matcha_rounds)
+        elif kind == "star":
+            out[kind] = C.star_overlay(gc, tp, center=center).cycle_time_ms
+        else:
+            out[kind] = C.design_overlay(kind, gc, tp).cycle_time_ms
+    return out
+
+
+def emit(name: str, value_ms: float, derived: str = "") -> None:
+    print(f"{name},{value_ms * 1000:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU — numbers are
+for regression tracking, not TPU performance).  CSV: name,us_per_call,derived."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, iters: int = 3) -> float:
+    jax.block_until_ready(fn())  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    B, S, K, G, hd = 1, 512, 2, 2, 64
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+
+    us = _bench(lambda: ops.flash_attention(q, k, v, block_q=128, block_kv=128))
+    us_ref = _bench(lambda: ref.attention_ref(q, k, v))
+    print(f"flash_attention_512,{us:.1f},ref_us={us_ref:.1f}")
+
+    nb = jax.random.normal(ks[3], (4, 1 << 20))
+    w = jnp.array([0.4, 0.3, 0.2, 0.1])
+    us = _bench(lambda: ops.gossip_mix(nb, w))
+    us_ref = _bench(lambda: ref.gossip_mix_ref(nb, w))
+    print(f"gossip_mix_4x1M,{us:.1f},ref_us={us_ref:.1f}")
+
+    B2, S2, H2, hd2 = 1, 512, 2, 64
+    q2 = jax.random.normal(ks[0], (B2, S2, H2, hd2)) * 0.5
+    k2 = jax.random.normal(ks[1], (B2, S2, H2, hd2)) * 0.5
+    v2 = jax.random.normal(ks[2], (B2, S2, H2, hd2)) * 0.5
+    li = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B2, S2, H2)))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B2, S2, H2)) + 2)
+    us = _bench(lambda: ops.mlstm_scan(q2, k2, v2, li, lf, chunk=128))
+    us_ref = _bench(lambda: ref.mlstm_scan_ref(q2, k2, v2, li, lf))
+    print(f"mlstm_scan_512,{us:.1f},ref_us={us_ref:.1f}")
+    print()
+
+
+if __name__ == "__main__":
+    run()

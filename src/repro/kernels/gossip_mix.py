@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for the DPASGD gossip mix — the paper's technique
+hot-spot.
+
+After the topology-scheduled ``ppermute`` transfers land, every silo
+holds a stack of K neighbour parameter blocks plus its own, and must
+compute the consensus combination
+
+    out = sum_k  lambda_k * neighbors[k]        (w_i <- sum_j A_ij w_j)
+
+This is a purely memory-bound fused multiply-add over K streams.  The
+kernel tiles the flattened parameter vector into VMEM chunks (lane-dim
+multiple of 128) and performs the K-way weighted accumulation in fp32
+without K round-trips to HBM — one read per neighbour block, one write.
+
+Roofline: bytes = (K+1) * chunk * dtype_size, FLOPs = 2K * chunk
+=> arithmetic intensity ~ 2/dtype_size FLOP/byte: firmly memory-bound,
+which is why fusing the K streams (vs K separate axpy's that each re-read
+the accumulator) cuts HBM traffic by ~2x for K>=2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(w_ref, lam_ref, o_ref, *, n_neighbors: int):
+    # w_ref: [K, block]; lam_ref: [K] (SMEM); o_ref: [block]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for k in range(n_neighbors):
+        acc = acc + lam_ref[k] * w_ref[k, :].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gossip_mix_pallas(
+    neighbor_blocks: jax.Array,  # [K, N] — own params at k=0 by convention
+    weights: jax.Array,          # [K] fp32 mixing coefficients
+    *,
+    block: int = 65536,
+    interpret: bool = True,
+) -> jax.Array:
+    K, N = neighbor_blocks.shape
+    assert weights.shape == (K,)
+    pad = (-N) % block
+    if pad:
+        neighbor_blocks = jnp.pad(neighbor_blocks, ((0, 0), (0, pad)))
+    Np = N + pad
+    grid = (Np // block,)
+    out = pl.pallas_call(
+        functools.partial(_mix_kernel, n_neighbors=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), neighbor_blocks.dtype),
+        interpret=interpret,
+    )(neighbor_blocks, weights.astype(jnp.float32))
+    return out[:N]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the chunkwise-parallel mLSTM / gated linear
+attention scan (xLSTM, Hymba recurrent hot-spot).
+
+Grid = (batch, head); each program walks the sequence chunk by chunk,
+holding the [hd, hd] recurrent state in VMEM scratch.  Per chunk it does
+three MXU matmuls (intra-chunk attention, inter-chunk query*state, state
+update) on (chunk, hd) tiles — the matmul-form recurrence that makes
+linear-attention states TPU-friendly (vs. a per-token scan which would
+be VPU-bound and sequence-length latency-bound).
+
+Contract identical to ``repro.models.ssm.mlstm_chunked_ref``:
+
+    S_t = f_t * S_{t-1} + i_t * k_t v_t^T ;   h_t = q_t . S_t
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref, state_ref,
+                  *, chunk: int, seq_len: int, head_dim: int):
+    n_chunks = seq_len // chunk
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    ci = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)      # [chunk, hd]
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    li = li_ref[...].astype(jnp.float32)    # [chunk]
+    lf = lf_ref[...].astype(jnp.float32)
+    g = jnp.cumsum(lf)                      # cumulative log-forget in chunk
+    g_total = g[-1]
+
+    state = state_ref[...].astype(jnp.float32)  # [hd, hd]
+    # inter-chunk: h_inter = (q * exp(g)) @ S
+    h_inter = jax.lax.dot(q * jnp.exp(g)[:, None], state,
+                          preferred_element_type=jnp.float32)
+    # intra-chunk: att[c,t] = (q k^T)[c,t] * exp(g[c]-g[t]+li[t]) * causal
+    att = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    rel = g[:, None] - g[None, :] + li[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(rel), 0.0)
+    h_intra = jax.lax.dot(att * decay, v, preferred_element_type=jnp.float32)
+    o_ref[...] = (h_inter + h_intra).astype(o_ref.dtype)
+    # state update: S' = exp(g_total) S + (k * exp(g_total - g + li))^T @ v
+    k_dec = k * jnp.exp(g_total - g + li)[:, None]
+    state_ref[...] = jnp.exp(g_total) * state + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def mlstm_scan_pallas(
+    q: jax.Array,       # [B, S, H, hd]
+    k: jax.Array,
+    v: jax.Array,
+    log_i: jax.Array,   # [B, S, H]
+    log_f: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    grid = (B, H, S // chunk)
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, seq_len=S, head_dim=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((None, chunk, None), lambda b, h, c: (b, c, h)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[pltpu_vmem((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation — works both on TPU and in interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except ImportError:  # pragma: no cover
+        return pl.MemoryRef(shape, dtype)

@@ -1,0 +1,55 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU set
+``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to lower via Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .gossip_mix import gossip_mix_pallas
+from .mlstm_scan import mlstm_scan_pallas
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
+def flash_attention(
+    q: jax.Array,  # [B, S, K, G, hd]
+    k: jax.Array,
+    v: jax.Array,
+    q_pos=None,   # accepted for API parity with the chunked reference
+    kv_pos=None,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret_default(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gossip_mix(neighbor_blocks: jax.Array, weights: jax.Array, *, block: int = 65536):
+    return gossip_mix_pallas(neighbor_blocks, weights, block=block,
+                             interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_scan(q, k, v, log_i, log_f, *, chunk: int = 128):
+    return mlstm_scan_pallas(q, k, v, log_i, log_f, chunk=chunk,
+                             interpret=_interpret_default())

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth used by the
+allclose test sweeps)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, S, K, G, hd]
+    k: jax.Array,  # [B, T, K, hd]
+    v: jax.Array,  # [B, T, K, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Naive O(S*T) softmax attention with causal/window masking."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bskgd,btkd->bskgt", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = jnp.arange(S)
+    kv_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gossip_mix_ref(neighbor_blocks: jax.Array, weights: jax.Array) -> jax.Array:
+    """out = sum_k weights[k] * neighbor_blocks[k]."""
+    acc = jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                     neighbor_blocks.astype(jnp.float32))
+    return acc.astype(neighbor_blocks.dtype)
+
+
+def mlstm_scan_ref(q, k, v, log_i, log_f) -> jax.Array:
+    """Per-token sequential recurrence (the mathematical definition):
+
+        S_t = f_t S_{t-1} + i_t k_t v_t^T ;  h_t = q_t . S_t
+    """
+    B, S, H, hd = q.shape
+
+    def step(state, t_in):
+        qt, kt, vt, it, ft = t_in  # [B,H,hd] x3, [B,H] x2
+        state = ft[..., None, None] * state + it[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kt, vt
+        )
+        h = jnp.einsum("bhd,bhde->bhe", qt, state)
+        return state, h
+
+    init = jnp.zeros((B, H, hd, hd), jnp.float32)
+    seq = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        jnp.exp(log_i.transpose(1, 0, 2).astype(jnp.float32)),
+        jnp.exp(log_f.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    _, hs = jax.lax.scan(step, init, seq)
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Embed the generated dry-run/roofline tables into EXPERIMENTS.md
+(replacing the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> markers).
+
+    PYTHONPATH=src python -m repro.launch.finalize_experiments
+"""
+
+import os
+import re
+import sys
+
+from .report import load, fmt_roofline_table, fmt_dryrun_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+
+
+def main() -> int:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    rows_single = load("16-16")
+    rows_multi = load("2-16-16")
+
+    dry = ("### Single-pod (16,16) — per-device dry-run artifacts\n\n"
+           + fmt_dryrun_table(rows_single)
+           + "\n\n### Multi-pod (2,16,16) — compile proof (512 devices)\n\n"
+           + fmt_multi_status(rows_multi))
+    roof = fmt_roofline_table(rows_single)
+    text = re.sub(r"<!-- DRYRUN_TABLE -->", dry, text)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->", roof, text)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+    return 0
+
+
+def fmt_multi_status(rows) -> str:
+    from .report import ARCH_ORDER, SHAPE_ORDER
+
+    out = ["| arch | " + " | ".join(SHAPE_ORDER) + " |",
+           "|---|" + "---|" * len(SHAPE_ORDER)]
+    for arch in ARCH_ORDER:
+        cells = []
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if d is None:
+                cells.append("—")
+            elif d["status"] == "ok":
+                peak = d["memory"].get("peak_bytes_per_device", 0) / 2 ** 30
+                cells.append(f"ok ({peak:.1f} GiB)")
+            elif d["status"] == "skipped":
+                cells.append("skip")
+            else:
+                cells.append("ERR")
+        out.append(f"| {arch} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,203 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape)
+combination — the dry-run lowers against these without allocating.
+
+Sharding scheme (see DESIGN.md §6):
+
+* params:  FSDP over "data" x TP over "model" (per-tensor logical rules);
+           multi-pod training adds a leading silo dim sharded over "pod".
+* batch:   [silos?, s, B_per, S] with B_per over "data" (+ "pod" serving).
+* KV caches: batch over "data", *sequence* over "model" — keeps 32k/512k
+           caches within HBM and is exactly how long-context serving
+           shards caches in practice (ring-attention layout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.models import ModelConfig, FSDP_TP, FSDP_TP_PODS, param_pspecs
+from repro.models import transformer as T
+from repro.models.params import abstract_params, tree_map_specs
+
+TOKEN_DT = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_input_specs(
+    cfg: ModelConfig, shape_name: str, *, local_steps: int = 1,
+    accum_steps: int = 1,
+) -> Dict[str, Any]:
+    """Abstract DPASGD batch for a training shape.
+
+    Layout: [n_silos?, s_local, accum?, B_micro, S]."""
+    spec = INPUT_SHAPES[shape_name]
+    S, B = spec["seq_len"], spec["global_batch"]
+    n = cfg.n_silos
+    per = B // max(n, 1)
+    assert per % accum_steps == 0, (per, accum_steps)
+    micro = per // accum_steps
+    lead: Tuple[int, ...] = (local_steps,)
+    if accum_steps > 1:
+        lead = lead + (accum_steps,)
+    if n > 1:
+        lead = (n,) + lead
+    S_tok = S - cfg.vision_prefix_len  # vision prefix counts toward seq budget
+    out = {
+        "tokens": sds(lead + (micro, S_tok), TOKEN_DT),
+        "labels": sds(lead + (micro, S_tok), TOKEN_DT),
+    }
+    if cfg.is_encdec:
+        out["enc_frames"] = sds(lead + (micro, cfg.encoder.seq_len, 128), jnp.bfloat16)
+    if cfg.vision_prefix_len:
+        out["vision_embeds"] = sds(lead + (micro, cfg.vision_prefix_len, 1024), jnp.bfloat16)
+    return out
+
+
+def train_batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any], *,
+                       multi_pod: bool, accum_steps: int = 1):
+    n = cfg.n_silos
+    out = {}
+    n_lead = (1 if n > 1 else 0) + 1 + (1 if accum_steps > 1 else 0)
+    for k, v in batch.items():
+        ndim = len(v.shape)
+        spec = [None] * ndim
+        if n > 1:
+            spec[0] = "pod"
+        spec[n_lead] = "data"  # the microbatch dim
+        out[k] = P(*spec)
+    return out
+
+
+def serve_input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Abstract serving inputs (prefill or decode)."""
+    spec = INPUT_SHAPES[shape_name]
+    S, B = spec["seq_len"], spec["global_batch"]
+    kind = spec["kind"]
+    out: Dict[str, Any] = {}
+    if kind == "prefill":
+        S_tok = S - cfg.vision_prefix_len
+        out["tokens"] = sds((B, S_tok), TOKEN_DT)
+        if cfg.is_encdec:
+            out["enc_frames"] = sds((B, cfg.encoder.seq_len, 128), jnp.bfloat16)
+        if cfg.vision_prefix_len:
+            out["vision_embeds"] = sds((B, cfg.vision_prefix_len, 1024), jnp.bfloat16)
+    else:  # decode: one new token against a seq_len cache
+        out["token"] = sds((B,), TOKEN_DT)
+        out["position"] = sds((), TOKEN_DT)
+        out["cache"] = abstract_cache(cfg, B, S)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, dtype)
+    )
+    if cfg.is_encdec:
+        # add cross-attention caches
+        H, hd = cfg.n_heads, cfg.head_dim
+        Tenc = cfg.encoder.seq_len
+        out = []
+        for c in cache:
+            c = dict(c)
+            c["xk"] = sds((batch, Tenc, H, hd), dtype)
+            c["xv"] = sds((batch, Tenc, H, hd), dtype)
+            out.append(c)
+        return out
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+
+
+def _divides(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def cache_pspec_leaf(shape: Tuple[int, ...], mesh_axis_sizes: Dict[str, int]):
+    """Heuristic cache sharding: dim0 = batch over ('pod','data') or 'data'
+    (when divisible), dim1 = sequence over 'model'; everything else local."""
+    model = mesh_axis_sizes.get("model", 1)
+    spec = [None] * len(shape)
+    if len(shape) >= 1:
+        spec[0] = _batch_lead_axes(shape, mesh_axis_sizes)
+    if len(shape) >= 2 and _divides(shape[1], model) and shape[1] > model:
+        spec[1] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache_abstract, mesh: jax.sharding.Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf(x):
+        return cache_pspec_leaf(x.shape, sizes)
+
+    return jax.tree_util.tree_map(leaf, cache_abstract)
+
+
+def _batch_lead_axes(shape, sizes):
+    """Shard the batch dim over ("pod","data") when divisible, else
+    "data", else replicate."""
+    if not shape or shape[0] <= 1:
+        return None
+    data = sizes.get("data", 1)
+    pod = sizes.get("pod", 1)
+    if pod > 1 and _divides(shape[0], pod * data):
+        return ("pod", "data")
+    if _divides(shape[0], data):
+        return "data"
+    return None
+
+
+def serve_batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any],
+                       mesh: jax.sharding.Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out: Dict[str, Any] = {}
+    for k, v in batch.items():
+        if k == "cache":
+            out[k] = cache_pspecs(v, mesh)
+        elif k == "position":
+            out[k] = P()
+        else:
+            shape = v.shape
+            out[k] = P(*([_batch_lead_axes(shape, sizes)] + [None] * (len(shape) - 1)))
+    return out
+
+
+def model_param_pspecs(cfg: ModelConfig, *, multi_pod_training: bool = False):
+    if cfg.n_silos > 1 and multi_pod_training:
+        return param_pspecs(T.model_specs(cfg), FSDP_TP_PODS, silo_leading=True)
+    if cfg.n_silos > 1:
+        # silo dim over "data": fine-grained federation mode
+        from repro.models import SILO_TP
+
+        return param_pspecs(T.model_specs(cfg), SILO_TP, silo_leading=True)
+    return param_pspecs(T.model_specs(cfg), FSDP_TP)
+
+
+def abstract_model_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    specs = T.model_specs(cfg)
+    base = abstract_params(specs, dtype)
+    if cfg.n_silos > 1:
+        base = jax.tree_util.tree_map(
+            lambda x: sds((cfg.n_silos,) + tuple(x.shape), x.dtype), base
+        )
+    return base
+
+
+def named(tree_pspec, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspec,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,106 @@
+"""Aggregate the dry-run JSONs into the §Dry-run and §Roofline markdown
+tables for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh 16-16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+ARCH_ORDER = [
+    "h2o-danube-1.8b", "xlstm-350m", "internvl2-76b", "internlm2-1.8b",
+    "qwen3-moe-30b-a3b", "deepseek-v2-lite-16b", "granite-20b",
+    "mistral-large-123b", "whisper-large-v3", "hymba-1.5b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str):
+    rows = {}
+    for path in glob.glob(os.path.join(RESULTS_DIR, f"*_{mesh}*.json")):
+        try:
+            d = json.load(open(path))
+        except Exception:
+            continue
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+
+def fmt_roofline_table(rows) -> str:
+    out = [
+        "| arch | shape | status | peak GiB/dev | compute ms | memory ms | "
+        "collective ms | bottleneck | useful-flop | analytic ms |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if d is None:
+                out.append(f"| {arch} | {shape} | MISSING | | | | | | | |")
+                continue
+            if d["status"] == "skipped":
+                out.append(f"| {arch} | {shape} | skipped (sub-quadratic "
+                           f"gate) | | | | | | | |")
+                continue
+            if d["status"] != "ok":
+                out.append(f"| {arch} | {shape} | ERROR: "
+                           f"{d.get('error','?')[:60]} | | | | | | | |")
+                continue
+            r = d["roofline"]
+            peak = d["memory"].get("peak_bytes_per_device", 0) / 2 ** 30
+            ana = r.get("analytic_compute_ms", 0.0)
+            out.append(
+                f"| {arch} | {shape} | ok | {peak:.2f} | "
+                f"{r['compute_ms']:.2f} | {r['memory_ms']:.2f} | "
+                f"{r['collective_ms']:.2f} | {r['bottleneck']} | "
+                f"{r['useful_flop_ratio']:.2f} | {ana:.2f} |")
+    return "\n".join(out)
+
+
+def fmt_dryrun_table(rows) -> str:
+    out = [
+        "| arch | shape | compile s | GFLOP/dev | HBM GB/dev | coll GB/dev | "
+        "collectives (AG/AR/RS/A2A/CP count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if not d or d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            cb = r["collective_breakdown"]
+            chips = r["chips"]
+            out.append(
+                f"| {arch} | {shape} | {d.get('seconds','?')} | "
+                f"{r['hlo_gflops']/chips:.1f} | {r['hlo_gbytes']/chips:.2f} | "
+                f"{r['coll_gbytes']/chips:.3f} | "
+                f"{cb['all-gather']//2**20}M/{cb['all-reduce']//2**20}M/"
+                f"{cb['reduce-scatter']//2**20}M/{cb['all-to-all']//2**20}M/"
+                f"{cb['collective-permute']//2**20}M x{cb['collective-count']} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16-16")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.kind == "roofline":
+        print(fmt_roofline_table(rows))
+    else:
+        print(fmt_dryrun_table(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + decode with KV/state caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import init_params, transformer as T
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, T.model_specs(cfg))
+    B = args.batch
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.is_encdec:
+        extras["enc_frames"] = jnp.ones((B, cfg.encoder.seq_len, 128), jnp.float32)
+    if cfg.vision_prefix_len:
+        extras["vision_embeds"] = jnp.ones((B, cfg.vision_prefix_len, 1024),
+                                           jnp.float32)
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, t: T.prefill(p, cfg, t, max_len,
+                                             cache_dtype=jnp.float32, **extras))
+    logits, cache = prefill(params, prompts)
+    print(f"prefill[{B}x{args.prompt_len}] in {time.time()-t0:.2f}s")
+
+    decode = jax.jit(lambda p, tok, c, pos: T.decode_step(p, cfg, tok, c, pos))
+    tok = logits.argmax(-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    pos0 = args.prompt_len + cfg.vision_prefix_len
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(pos0 + i))
+        tok = logits.argmax(-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    toks = B * (args.gen - 1)
+    print(f"decode {args.gen - 1} steps x batch {B}: "
+          f"{dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s on CPU)")
+    gen = jnp.stack(out_tokens, axis=1)
+    print("generated ids[0]:", list(map(int, gen[0][:16])))
+    assert bool(jnp.isfinite(logits).all())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

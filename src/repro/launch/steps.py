@@ -1,0 +1,56 @@
+"""Jittable step functions used by the launcher and the dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed import DPASGDConfig, GossipPlan, make_train_step
+from repro.models import ModelConfig
+from repro.models import transformer as T
+from repro.optim import Optimizer, adamw
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    *,
+    optimizer: Optional[Optimizer] = None,
+    gossip_impl: str = "ppermute",
+    silo_axis: Optional[str] = "pod",
+    plan: Optional[GossipPlan] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    local_steps: int = 1,
+    accum_steps: int = 1,
+    grad_pspecs=None,
+) -> Callable:
+    optimizer = optimizer or adamw(1e-4)
+    fed = DPASGDConfig(local_steps=local_steps, gossip_impl=gossip_impl,
+                       silo_axis=silo_axis, accum_steps=accum_steps)
+    if cfg.n_silos > 1 and plan is None:
+        from repro.fed.topology_runtime import plan_for_n_silos
+
+        plan = plan_for_n_silos("ring", cfg.n_silos)
+    return make_train_step(cfg, fed, optimizer, plan, mesh,
+                           grad_pspecs=grad_pspecs)
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(
+            params, cfg, batch["tokens"], max_len,
+            enc_frames=batch.get("enc_frames"),
+            vision_embeds=batch.get("vision_embeds"),
+        )
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_fn(params, batch):
+        return T.decode_step(params, cfg, batch["token"], batch["cache"],
+                             batch["position"])
+
+    return decode_fn

@@ -1,0 +1,71 @@
+"""Sequential dry-run sweep driver: one subprocess per (arch x shape x
+mesh) so each run gets a fresh XLA; skips combos whose result JSON
+already exists (idempotent/resumable).
+
+    PYTHONPATH=src python -m repro.launch.sweep [--multi-pod] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "internlm2-1.8b", "xlstm-350m", "hymba-1.5b", "h2o-danube-1.8b",
+    "whisper-large-v3", "deepseek-v2-lite-16b", "qwen3-moe-30b-a3b",
+    "granite-20b", "internvl2-76b", "mistral-large-123b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def result_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "2-16-16" if multi_pod else "16-16"
+    return os.path.join(RESULTS_DIR, f"{arch}_{shape}_{mesh}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    failures = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            path = result_path(arch, shape, args.multi_pod)
+            if os.path.exists(path) and not args.force:
+                try:
+                    st = json.load(open(path)).get("status")
+                except Exception:
+                    st = "corrupt"
+                if st in ("ok", "skipped"):
+                    print(f"[skip] {arch} {shape} (cached: {st})", flush=True)
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            print(f"[run ] {' '.join(cmd[3:])}  t={time.time()-t0:.0f}s", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   env={**os.environ, "PYTHONPATH": "src"})
+                if r.returncode != 0:
+                    failures.append((arch, shape))
+            except subprocess.TimeoutExpired:
+                print(f"[TIMEOUT] {arch} {shape}", flush=True)
+                failures.append((arch, shape))
+    print(f"sweep done in {time.time()-t0:.0f}s; failures: {failures}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+from .config import ModelConfig, MoEConfig, MLAConfig, SSMConfig, EncoderConfig
+from .params import (
+    ParamSpec,
+    ShardingRules,
+    FSDP_TP,
+    FSDP_TP_PODS,
+    SILO_TP,
+    init_params,
+    abstract_params,
+    param_pspecs,
+    count_params,
+)
+from .transformer import (
+    model_specs,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+    encode,
+    prefill,
+    prefill_cross_cache,
+)

@@ -1,0 +1,71 @@
+"""Activation sharding constraints.
+
+GSPMD propagation through the embedding gather loses the batch ("data")
+sharding, silently replicating every activation across the data axis
+(~16x memory).  The launcher installs an activation context here and the
+model inserts ``with_sharding_constraint`` at the residual-stream
+boundaries.  ``seq_axis`` optionally shards the *sequence* dim of the
+residual stream between blocks (sequence parallelism) — a §Perf lever
+that divides per-layer remat storage by the model-axis size.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _get():
+    return getattr(_state, "spec", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Optional[Tuple] = ("data",),
+                        seq_axis: Optional[str] = None):
+    """Context: residual stream [B, S, D] constrained to
+    P(batch_axes, seq_axis, None)."""
+    prev = _get()
+    _state.spec = (batch_axes, seq_axis)
+    try:
+        yield
+    finally:
+        _state.spec = prev
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    spec = _get()
+    if spec is None:
+        return x
+    batch_axes, seq_axis = spec
+    if x.ndim < 2:
+        return x
+    b = batch_axes if batch_axes else None
+    candidates = []
+    if x.ndim == 3:
+        s = seq_axis if seq_axis else None
+        candidates.append(P(b, s, None))
+        candidates.append(P(b, None, None))
+    else:
+        candidates.append(P(*([b] + [None] * (x.ndim - 1))))
+    candidates.append(None)
+    for p in candidates:
+        if p is None:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, p)
+        except Exception:
+            continue
+    return x
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

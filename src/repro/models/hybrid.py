@@ -1,0 +1,69 @@
+"""Hymba-style hybrid block: attention heads and mamba (SSM) heads run in
+parallel on the same input; their normalized outputs are averaged with
+learned scales [arXiv:2411.13676].  Attention uses sliding windows in all
+but every ``global_attn_every``-th layer."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+from .attention import attn_specs, attn_forward, attn_decode, init_kv_cache
+from .ssm import mamba_specs, mamba_forward, mamba_decode, init_mamba_state
+from .layers import rms_norm
+
+
+def hymba_d_inner(cfg: ModelConfig) -> int:
+    # mamba head width matches the attention width (parallel heads).
+    return cfg.n_heads * cfg.head_dim
+
+
+def hymba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D = cfg.d_model
+    di = hymba_d_inner(cfg)
+    specs: Dict[str, ParamSpec] = {}
+    specs["attn"] = attn_specs(cfg)  # type: ignore[assignment]
+    specs["mamba"] = mamba_specs(cfg, di)  # type: ignore[assignment]
+    specs["attn_ln"] = ParamSpec((D,), ("embed",), 1.0, init="ones")
+    specs["mamba_ln"] = ParamSpec((D,), ("embed",), 1.0, init="ones")
+    return specs
+
+
+def hymba_forward(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                  layer: int, *, return_cache: bool = False):
+    window = cfg.sliding_window if cfg.layer_uses_window(layer) else None
+    a = attn_forward(p["attn"], cfg, x, positions, causal=True, window=window,
+                     return_kv=return_cache)
+    if return_cache:
+        a, kv = a
+        m, st = mamba_forward(p["mamba"], cfg, x, hymba_d_inner(cfg),
+                              return_state=True)
+    else:
+        m = mamba_forward(p["mamba"], cfg, x, hymba_d_inner(cfg))
+    a = rms_norm(a, p["attn_ln"], cfg.norm_eps)
+    m = rms_norm(m, p["mamba_ln"], cfg.norm_eps)
+    out = 0.5 * (a + m)
+    if return_cache:
+        return out, (kv, st)
+    return out
+
+
+def hymba_decode(p, cfg: ModelConfig, x: jax.Array, cache, position, layer: int):
+    window = cfg.sliding_window if cfg.layer_uses_window(layer) else None
+    a, kv = attn_decode(p["attn"], cfg, x, cache["kv"], position, window=window)
+    m, st = mamba_decode(p["mamba"], cfg, x, cache["ssm"], hymba_d_inner(cfg))
+    a = rms_norm(a, p["attn_ln"], cfg.norm_eps)
+    m = rms_norm(m, p["mamba_ln"], cfg.norm_eps)
+    return 0.5 * (a + m), {"kv": kv, "ssm": st}
+
+
+def init_hymba_cache(cfg: ModelConfig, batch: int, max_len: int, layer: int, dtype):
+    window = cfg.sliding_window if cfg.layer_uses_window(layer) else None
+    return {
+        "kv": init_kv_cache(cfg, batch, max_len, window, dtype),
+        "ssm": init_mamba_state(cfg, batch, hymba_d_inner(cfg), dtype),
+    }

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN: top-k router, capacity-based dispatch
+(GShard/Switch style), shared experts (DeepSeek-V2), expert-parallel
+sharding over the "model" mesh axis, and the load-balance auxiliary loss.
+
+Dispatch is *group-local*: tokens are grouped per sequence (the batch
+dim, sharded over "data"), each group gets its own capacity
+``cap = top_k * S * capacity_factor / E``, and positions are computed by
+a sort within the group — so dispatch buffers scale with the per-shard
+token count, not the global batch (GShard semantics), and the only
+cross-shard communication is the expert-parallel einsum itself.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .act_sharding import constrain
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_expert
+    s = D ** -0.5
+    specs = {
+        "router": ParamSpec((D, E), ("embed", None), s),
+        "w_gate": ParamSpec((E, D, F), ("experts", "embed", "expert_ffn"), s),
+        "w_up": ParamSpec((E, D, F), ("experts", "embed", "expert_ffn"), s),
+        "w_down": ParamSpec((E, F, D), ("experts", "expert_ffn", "embed"), F ** -0.5),
+    }
+    if m.n_shared:
+        Fs = m.d_shared or F
+        specs.update(
+            sh_gate=ParamSpec((D, m.n_shared * Fs), ("embed", "ffn"), s),
+            sh_up=ParamSpec((D, m.n_shared * Fs), ("embed", "ffn"), s),
+            sh_down=ParamSpec((m.n_shared * Fs, D), ("ffn", "embed"), Fs ** -0.5),
+        )
+    return specs
+
+
+def _dispatch_group(xf, logits, k: int, E: int, cap: int):
+    """Group-local top-k dispatch.  xf [T, D]; logits [T, E] fp32.
+
+    Positions are computed by one joint sort over all T*k assignments;
+    the scatter itself runs per top-k slot with [T, D] updates (k-x
+    smaller live buffers than a flat [T*k, D] formulation) and bf16
+    gates — see EXPERIMENTS.md §Perf (qwen3 iteration 1)."""
+    T, D = xf.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    flat_idx = gate_idx.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_idx, stable=True)
+    sorted_e = flat_idx[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - first
+    inv = jnp.argsort(order, stable=True)
+    pos = pos_sorted[inv].reshape(T, k)
+    keep = pos < cap
+    gate = (gate_vals * keep).astype(xf.dtype)  # [T, k] bf16
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    buf = jnp.zeros((E, cap, D), xf.dtype)
+    for slot in range(k):
+        buf = buf.at[gate_idx[:, slot], safe_pos[:, slot]].add(
+            jnp.where(keep[:, slot, None], xf, 0))
+    return buf, (gate_idx, safe_pos, gate, probs)
+
+
+def moe_forward(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  Capacity-dropped tokens pass through
+    the residual (output 0 from the routed path)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    cap = int(max(1, (k * S * m.capacity_factor) // E))
+    logits = (x @ p["router"]).astype(jnp.float32)  # [B, S, E]
+
+    buf, combine = jax.vmap(
+        lambda xf, lg: _dispatch_group(xf, lg, k, E, cap))(x, logits)
+    # buf: [B(groups->data), E, cap, D]
+    buf = constrain(buf, P("data", "model", None, None))
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", g * u, p["w_down"])  # [B, E, cap, D]
+    y = constrain(y, P("data", "model", None, None))
+
+    def _combine_group(y_g, info):
+        gate_idx, safe_pos, gate, _ = info
+        out = jnp.zeros((S, D), y_g.dtype)
+        for slot in range(k):
+            out = out + y_g[gate_idx[:, slot], safe_pos[:, slot]] * gate[:, slot, None]
+        return out
+
+    out = jax.vmap(_combine_group)(y, combine)  # [B, S, D]
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * p_e (global)
+    probs = combine[3]  # [B, S, E]
+    me = probs.reshape(-1, E).mean(axis=0)
+    top1 = combine[0][..., 0].reshape(-1)  # [B*S]
+    ce = jax.nn.one_hot(top1, E, dtype=jnp.float32).mean(axis=0)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    if m.n_shared:
+        sg = jax.nn.silu(x @ p["sh_gate"])
+        su = x @ p["sh_up"]
+        out = out + (sg * su) @ p["sh_down"]
+    return out.astype(x.dtype), aux

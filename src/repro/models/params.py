@@ -1,0 +1,147 @@
+"""Parameter specification system: one source of truth for shapes,
+logical sharding axes, and initialization.
+
+Every parameter leaf is described by a ``ParamSpec(shape, axes, scale)``
+where ``axes`` are *logical* axis names mapped to mesh axes by a
+``ShardingRules`` table.  ``init_params`` materializes arrays;
+``param_pspecs`` produces the matching ``PartitionSpec`` pytree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim
+    scale: float = 0.02              # stddev of truncated-normal init; 0 -> zeros, 1.0 w/ "ones" -> ones
+    init: str = "normal"             # "normal" | "zeros" | "ones"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping."""
+
+    rules: Mapping[str, Optional[Any]]
+    batch_axes: Tuple[Any, ...] = ("data",)  # axes sharding the batch dim
+    silo_axis: Optional[str] = None          # mesh axis carrying silo replicas
+
+    def mesh_axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+
+# Single-pod FSDP x TP: params 2-D sharded, batch over "data".
+FSDP_TP = ShardingRules(
+    rules={
+        "embed": "data",     # FSDP shard dim
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ffn": None,
+        "inner": "model",
+        "state": None,
+        "rank": None,
+        "conv": None,
+        "enc_seq": None,
+    },
+    batch_axes=("data",),
+    silo_axis=None,
+)
+
+# Multi-pod DPASGD: one silo per pod; params replicated per pod slice
+# (leading silo dim handled by the fed layer), FSDP over "data" inside.
+FSDP_TP_PODS = ShardingRules(
+    rules=dict(FSDP_TP.rules),
+    batch_axes=("pod", "data"),
+    silo_axis="pod",
+)
+
+# Fine-grained federation: every data-axis index is a silo (16 per pod);
+# inside a silo only TP is available, so no FSDP dim.
+SILO_TP = ShardingRules(
+    rules={**dict(FSDP_TP.rules), "embed": None},
+    batch_axes=("data",),
+    silo_axis="data",
+)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def init_params(key: jax.Array, spec_tree, dtype=jnp.float32):
+    """Materialize a ParamSpec pytree into arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        return (jax.random.truncated_normal(k, -2.0, 2.0, spec.shape, jnp.float32)
+                * spec.scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (for .lower() without allocation)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree)
+
+
+def param_pspecs(spec_tree, rules: ShardingRules, *, silo_leading: bool = False):
+    """PartitionSpec pytree matching the params.
+
+    ``silo_leading``: params carry a leading silo-replica dimension that is
+    sharded over ``rules.silo_axis``.
+    """
+
+    def to_pspec(spec: ParamSpec):
+        axes = [rules.mesh_axis(a) for a in spec.axes]
+        # Never map two dims to the same mesh axis.
+        seen = set()
+        clean = []
+        for a in axes:
+            if a is not None and a in seen:
+                clean.append(None)
+            else:
+                clean.append(a)
+                if a is not None:
+                    seen.add(a)
+        if silo_leading:
+            lead = rules.silo_axis
+            if lead in seen:
+                lead = None
+            return P(lead, *clean)
+        return P(*clean)
+
+    return tree_map_specs(to_pspec, spec_tree)
+
+
+def count_params(spec_tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(spec_tree, is_leaf=_is_spec):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,384 @@
+"""Recurrent blocks: xLSTM's mLSTM (chunked gated linear attention form)
+and sLSTM (scalar-memory LSTM with exponential gating), plus a
+Mamba-style selective SSM head used by the Hymba hybrid block.
+
+mLSTM training path uses the chunkwise-parallel formulation (matmul-form
+intra-chunk + state carry inter-chunk) — sub-quadratic, MXU-friendly, and
+the contract implemented by the Pallas ``mlstm_scan`` kernel.  Decode is a
+single recurrent state update (O(1) memory — this is what makes
+``long_500k`` runnable for the SSM/hybrid architectures).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): internal 2x up-projection, per-head scalar gates.
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D = cfg.d_model
+    e = cfg.ssm.expand if cfg.ssm else 2
+    Di = e * D
+    H = cfg.n_heads
+    s = D ** -0.5
+    si = Di ** -0.5
+    return {
+        "w_up": ParamSpec((D, 2 * Di), ("embed", "inner"), s),   # x branch + gate z
+        "w_q": ParamSpec((Di, Di), ("inner", None), si),
+        "w_k": ParamSpec((Di, Di), ("inner", None), si),
+        "w_v": ParamSpec((Di, Di), ("inner", None), si),
+        "w_if": ParamSpec((Di, 2 * H), ("inner", None), si),     # input & forget gates
+        "b_if": ParamSpec((2 * H,), (None,), 0.0, init="zeros"),
+        "out_ln": ParamSpec((Di,), ("inner",), 1.0, init="ones"),
+        "w_down": ParamSpec((Di, D), ("inner", "embed"), si),
+    }
+
+
+def _mlstm_gates(p, xu, H):
+    """Per-head log-space gates: log input gate, log forget gate (sigmoid)."""
+    gates = xu @ p["w_if"] + p["b_if"]  # [B,S,2H]
+    i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)  # [B,S,H], <= 0
+    log_i = i_raw - jax.nn.softplus(i_raw)  # stabilized log sigmoid(i)
+    return log_i, log_f
+
+
+def mlstm_forward(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    chunk: int = 128,
+    *,
+    return_state: bool = False,
+):
+    """Chunked gated linear attention (mLSTM without the normalizer n_t —
+    we use RMS output norm instead, cf. DESIGN.md)."""
+    D = cfg.d_model
+    e = cfg.ssm.expand if cfg.ssm else 2
+    Di = e * D
+    H = cfg.n_heads
+    hd = Di // H
+    B, S, _ = x.shape
+    up = x @ p["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)  # [B,S,Di] each
+    q = (xu @ p["w_q"]).reshape(B, S, H, hd)
+    k = (xu @ p["w_k"]).reshape(B, S, H, hd) * (hd ** -0.5)
+    v = (xu @ p["w_v"]).reshape(B, S, H, hd)
+    log_i, log_f = _mlstm_gates(p, xu, H)  # [B,S,H]
+
+    state = None
+    if cfg.use_flash_kernel and not return_state:
+        from repro.kernels import ops as kops
+
+        h = kops.mlstm_scan(q, k, v, log_i, log_f, chunk=chunk)
+    else:
+        h, state = mlstm_chunked_ref(q, k, v, log_i, log_f, chunk=chunk,
+                                     return_state=True)
+
+    h = h.reshape(B, S, Di)
+    from .layers import rms_norm
+
+    h = rms_norm(h, p["out_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    out = h @ p["w_down"]
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_chunked_ref(q, k, v, log_i, log_f, *, chunk: int = 128,
+                      return_state: bool = False, unroll: bool = False):
+    """Pure-jnp chunkwise-parallel gated linear attention.
+
+    State recurrence per head:  S_t = f_t S_{t-1} + i_t k_t v_t^T,
+    output h_t = q_t . S_t.  Chunked: intra-chunk matmul with relative
+    decay matrix, inter-chunk state carry.  All in fp32.
+    """
+    B, S, H, hd = q.shape
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    n = S // C
+    qf = q.astype(jnp.float32).reshape(B, n, C, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, n, C, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, n, C, H, hd)
+    li = log_i.reshape(B, n, C, H)
+    lf = log_f.reshape(B, n, C, H)
+    # cumulative log forget within chunk: g[c] = sum_{t<=c} lf[t]
+    g = jnp.cumsum(lf, axis=2)  # [B,n,C,H]
+    g_total = g[:, :, -1]  # [B,n,H]
+
+    def chunk_step(state, inp):
+        # state: [B,H,hd,hd]
+        qc, kc, vc, gc, lic, gt = inp
+        # inter-chunk: h_inter[c] = (q[c] * exp(g[c])) . S
+        q_dec = qc * jnp.exp(gc)[..., None]
+        h_inter = jnp.einsum("bchd,bhde->bche", q_dec, state)
+        # intra-chunk: decay(c, t) = exp(g[c] - g[t]) * i[t], t <= c
+        att = jnp.einsum("bchd,bthd->bhct", qc, kc)
+        rel = gc[:, :, None, :] - gc[:, None, :, :]  # [B,c,t,H]
+        rel = rel.transpose(0, 3, 1, 2)  # [B,H,c,t]
+        gate = jnp.exp(rel + lic.transpose(0, 2, 1)[:, :, None, :])
+        causal = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), jnp.float32))
+        att = att * gate * causal
+        h_intra = jnp.einsum("bhct,bthd->bchd", att, vc)
+        # state update: S' = exp(g_total) S + sum_t exp(g_total - g[t]) i[t] k[t] v[t]^T
+        k_dec = kc * jnp.exp(gt[:, None, :] - gc + lic)[..., None]
+        state = jnp.exp(gt)[..., None, None] * state + jnp.einsum(
+            "bthd,bthe->bhde", k_dec, vc
+        )
+        return state, h_inter + h_intra
+
+    init = jnp.zeros((B, H, hd, hd), jnp.float32)
+    inputs = (
+        qf.transpose(1, 0, 2, 3, 4),
+        kf.transpose(1, 0, 2, 3, 4),
+        vf.transpose(1, 0, 2, 3, 4),
+        g.transpose(1, 0, 2, 3),
+        li.transpose(1, 0, 2, 3),
+        g_total.transpose(1, 0, 2),
+    )
+    final_state, hs = jax.lax.scan(chunk_step, init, inputs,
+                                   unroll=n if unroll else 1)  # [n,B,C,H,hd]
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    if return_state:
+        return h.astype(q.dtype), final_state
+    return h.astype(q.dtype)
+
+
+def mlstm_decode(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, D]
+    state: jax.Array,  # [B, H, hd, hd] fp32
+) -> Tuple[jax.Array, jax.Array]:
+    D = cfg.d_model
+    e = cfg.ssm.expand if cfg.ssm else 2
+    Di = e * D
+    H = cfg.n_heads
+    hd = Di // H
+    B = x.shape[0]
+    up = x @ p["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q = (xu @ p["w_q"]).reshape(B, H, hd).astype(jnp.float32)
+    k = ((xu @ p["w_k"]) * (hd ** -0.5)).reshape(B, H, hd).astype(jnp.float32)
+    v = (xu @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, xu, H)  # [B,1,H]
+    i_g = jnp.exp(log_i[:, 0])[..., None, None]
+    f_g = jnp.exp(log_f[:, 0])[..., None, None]
+    state = f_g * state + i_g * jnp.einsum("bhd,bhe->bhde", k, v)
+    h = jnp.einsum("bhd,bhde->bhe", q, state).reshape(B, 1, Di).astype(x.dtype)
+    from .layers import rms_norm
+
+    h = rms_norm(h, p["out_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ p["w_down"], state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> jax.Array:
+    e = cfg.ssm.expand if cfg.ssm else 2
+    Di = e * cfg.d_model
+    H = cfg.n_heads
+    hd = Di // H
+    return jnp.zeros((batch, H, hd, hd), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block: scalar memory, exponential gating, block-diagonal recurrence.
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    s = D ** -0.5
+    return {
+        "w": ParamSpec((D, 4 * D), ("embed", "inner"), s),      # i,f,z,o pre-acts
+        "r": ParamSpec((H, dh, 4 * dh), (None, None, None), dh ** -0.5),
+        "b": ParamSpec((4 * D,), (None,), 0.0, init="zeros"),
+        "out_ln": ParamSpec((D,), ("embed",), 1.0, init="ones"),
+        "w_down": ParamSpec((D, D), ("embed", None), s),
+    }
+
+
+def slstm_forward(p, cfg: ModelConfig, x: jax.Array, *,
+                  return_state: bool = False):
+    """Sequential scan over time (inherently recurrent)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    pre = (x @ p["w"] + p["b"]).reshape(B, S, 4, H, dh)
+
+    def step(carry, t_in):
+        c, n, h, m = carry  # cell, normalizer, hidden, stabilizer [B,H,dh]
+        rec = jnp.einsum("bhd,hde->bhe", h, p["r"]).reshape(B, H, 4, dh)
+        zi = t_in[:, 0] + rec[:, :, 0].reshape(B, H, dh)
+        zf = t_in[:, 1] + rec[:, :, 1].reshape(B, H, dh)
+        zz = t_in[:, 2] + rec[:, :, 2].reshape(B, H, dh)
+        zo = t_in[:, 3] + rec[:, :, 3].reshape(B, H, dh)
+        # exponential gating with stabilizer state m
+        m_new = jnp.maximum(zf + m, zi)
+        i_g = jnp.exp(zi - m_new)
+        f_g = jnp.exp(zf + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(zz)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    carry0 = (zeros, zeros, zeros, zeros)
+    pre_t = pre.transpose(1, 0, 2, 3, 4).astype(jnp.float32)  # [S,B,4,H,dh]
+    final_state, hs = jax.lax.scan(step, carry0, pre_t)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    from .layers import rms_norm
+
+    out = rms_norm(h, p["out_ln"], cfg.norm_eps) @ p["w_down"]
+    if return_state:
+        return out, final_state
+    return out
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jax.Array, state):
+    """state = (c, n, h, m) each [B,H,dh] fp32."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    pre = (x @ p["w"] + p["b"]).reshape(B, 4, H, dh).astype(jnp.float32)
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r"]).reshape(B, H, 4, dh)
+    zi = pre[:, 0] + rec[:, :, 0].reshape(B, H, dh)
+    zf = pre[:, 1] + rec[:, :, 1].reshape(B, H, dh)
+    zz = pre[:, 2] + rec[:, :, 2].reshape(B, H, dh)
+    zo = pre[:, 3] + rec[:, :, 3].reshape(B, H, dh)
+    m_new = jnp.maximum(zf + m, zi)
+    i_g = jnp.exp(zi - m_new)
+    f_g = jnp.exp(zf + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(zz)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+    out = h_new.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    from .layers import rms_norm
+
+    out = rms_norm(out, p["out_ln"], cfg.norm_eps) @ p["w_down"]
+    return out, (c_new, n_new, h_new, m_new)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, z)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (used by the Hymba hybrid block)
+
+
+def mamba_specs(cfg: ModelConfig, d_inner: int) -> Dict[str, ParamSpec]:
+    D = cfg.d_model
+    S = cfg.ssm.d_state if cfg.ssm else 16
+    dt_rank = max(1, D // 16)
+    s = D ** -0.5
+    return {
+        "w_in": ParamSpec((D, 2 * d_inner), ("embed", "inner"), s),
+        "conv_w": ParamSpec((4, d_inner), ("conv", "inner"), 0.5),
+        "w_bc": ParamSpec((d_inner, 2 * S), ("inner", None), d_inner ** -0.5),
+        "w_dt1": ParamSpec((d_inner, dt_rank), ("inner", "rank"), d_inner ** -0.5),
+        "w_dt2": ParamSpec((dt_rank, d_inner), ("rank", "inner"), dt_rank ** -0.5),
+        "a_log": ParamSpec((d_inner, S), ("inner", "state"), 0.0, init="ones"),
+        "d_skip": ParamSpec((d_inner,), ("inner",), 1.0, init="ones"),
+        "w_out": ParamSpec((d_inner, D), ("inner", "embed"), d_inner ** -0.5),
+    }
+
+
+def _mamba_scan_inputs(p, x, d_inner, d_state):
+    """Shared preprocessing: conv, gates, discretization."""
+    B, S, _ = x.shape
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B,S,Di]
+    # depthwise causal conv, width 4
+    pad = jnp.pad(xin, ((0, 0), (3, 0), (0, 0)))
+    conv = sum(pad[:, i : i + S] * p["conv_w"][i] for i in range(4))
+    u = jax.nn.silu(conv)
+    bc = u @ p["w_bc"]
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)  # [B,S,state]
+    dt = jax.nn.softplus((u @ p["w_dt1"]) @ p["w_dt2"])  # [B,S,Di]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [Di, state]
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # [B,S,Di,state]
+    dBu = (dt * u).astype(jnp.float32)[..., None] * Bmat.astype(jnp.float32)[:, :, None, :]
+    return u, z, Cmat, dA, dBu
+
+
+def mamba_forward(p, cfg: ModelConfig, x: jax.Array, d_inner: int, *,
+                  return_state: bool = False):
+    d_state = cfg.ssm.d_state if cfg.ssm else 16
+    B, S, _ = x.shape
+    u, z, Cmat, dA, dBu = _mamba_scan_inputs(p, x, d_inner, d_state)
+
+    def step(h, t_in):
+        dA_t, dBu_t, C_t = t_in  # [B,Di,state], [B,Di,state], [B,state]
+        h = dA_t * h + dBu_t
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            dA.transpose(1, 0, 2, 3),
+            dBu.transpose(1, 0, 2, 3),
+            Cmat.transpose(1, 0, 2).astype(jnp.float32),
+        ),
+    )
+    y = ys.transpose(1, 0, 2).astype(x.dtype)  # [B,S,Di]
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        # conv ring buffer: last 3 pre-conv inputs
+        xz = x @ p["w_in"]
+        xin = jnp.split(xz, 2, axis=-1)[0]
+        pad3 = jnp.pad(xin, ((0, 0), (3, 0), (0, 0)))[:, -3:]
+        return out, (h_final, pad3)
+    return out
+
+
+def mamba_decode(p, cfg: ModelConfig, x: jax.Array, state, d_inner: int):
+    """state = (h [B,Di,S], conv_buf [B,3,Di])."""
+    d_state = cfg.ssm.d_state if cfg.ssm else 16
+    B = x.shape[0]
+    h, conv_buf = state
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B,1,Di]
+    win = jnp.concatenate(
+        [conv_buf.astype(x.dtype), xin.reshape(B, 1, d_inner)], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", win, p["conv_w"])
+    u = jax.nn.silu(conv)  # [B,Di]
+    bc = u @ p["w_bc"]
+    Bv, Cv = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((u @ p["w_dt1"]) @ p["w_dt2"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBu = (dt * u).astype(jnp.float32)[..., None] * Bv.astype(jnp.float32)[:, None, :]
+    h = dA * h + dBu
+    y = jnp.einsum("bds,bs->bd", h, Cv.astype(jnp.float32)).astype(x.dtype)
+    y = y + u * p["d_skip"]
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    new_buf = win[:, 1:]
+    return y @ p["w_out"], (h, new_buf)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, d_inner: int,
+                     dtype=jnp.float32):
+    d_state = cfg.ssm.d_state if cfg.ssm else 16
+    return (
+        jnp.zeros((batch, d_inner, d_state), jnp.float32),  # SSM state: fp32
+        jnp.zeros((batch, 3, d_inner), dtype),              # conv ring buffer
+    )

@@ -1,0 +1,9 @@
+from .optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    inverse_sqrt_decay,
+)

@@ -1,0 +1,115 @@
+"""Minimal pytree optimizers (paper uses SGD and Adam — Appendix G.3)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params
+    )
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array]) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        new = jax.tree_util.tree_map(lambda p, g: p - eta * g.astype(p.dtype),
+                                     params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float | Callable, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return _tree_zeros_like(params)
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: beta * m + g, new_m, grads)
+        else:
+            upd = new_m
+        new_p = jax.tree_util.tree_map(lambda p, u: p - eta * u.astype(p.dtype),
+                                       params, upd)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params, jnp.float32),
+            "nu": _tree_zeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        eta = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * step_).astype(p.dtype)
+
+        new_p = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_p, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def inverse_sqrt_decay(base_lr: float, warmup: int = 0):
+    """The paper decays lr with the inverse square root of the round count."""
+
+    def lr(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        val = base_lr / jnp.sqrt(s)
+        if warmup:
+            val = jnp.where(step < warmup, base_lr * (step + 1) / warmup, val)
+        return val
+
+    return lr

@@ -1,0 +1,68 @@
+"""Time simulator (Algorithm 3) and its agreement with the analytic
+cycle time — the paper's Thm 3.23 identity, end to end."""
+
+import pytest
+
+import repro.core as C
+from repro.core.delays import TrainingParams
+from repro.core.simulator import (
+    predicted_cycle_time,
+    simulate_overlay,
+    training_time_ms,
+)
+
+
+def setup_gc(name="gaia", access=10.0, s=1):
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay(name, access_capacity_gbps=access)
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=s)
+    return u, gc, tp
+
+
+@pytest.mark.parametrize("kind", ["mst", "ring", "delta_mbst"])
+def test_simulator_slope_matches_karp(kind):
+    u, gc, tp = setup_gc()
+    ov = C.design_overlay(kind, gc, tp)
+    tl = simulate_overlay(gc, tp, ov.edges, num_rounds=200)
+    emp = tl.empirical_cycle_time()
+    assert emp == pytest.approx(ov.cycle_time_ms, rel=0.02)
+
+
+def test_training_time_is_cycle_time_times_rounds_asymptotically():
+    u, gc, tp = setup_gc()
+    ov = C.design_overlay("ring", gc, tp)
+    t100 = training_time_ms(gc, tp, ov.edges, 100)
+    t200 = training_time_ms(gc, tp, ov.edges, 200)
+    assert (t200 - t100) / 100 == pytest.approx(ov.cycle_time_ms, rel=0.02)
+
+
+def test_ring_throughput_beats_star_in_rounds_completed():
+    """The headline claim, via the simulator: within a fixed wall-clock
+    budget the RING completes ~3x more rounds than the STAR on Gaia."""
+    u, gc, tp = setup_gc("gaia")
+    ring = C.design_overlay("ring", gc, tp)
+    star = C.star_overlay(gc, tp, center=u.load_centrality_center())
+    budget = 60_000.0  # 60 s
+    ring_rounds = budget / ring.cycle_time_ms
+    star_rounds = budget / star.cycle_time_ms
+    assert ring_rounds / star_rounds > 2.5
+
+
+def test_local_steps_shrink_relative_gap():
+    """Fig. 4: as s grows, overlays converge (computation dominates)."""
+    gaps = []
+    for s in (1, 10):
+        u, gc, tp = setup_gc(s=s)
+        ring = C.design_overlay("ring", gc, tp)
+        star = C.star_overlay(gc, tp, center=u.load_centrality_center())
+        gaps.append(star.cycle_time_ms / ring.cycle_time_ms)
+    assert gaps[1] < gaps[0]
+
+
+def test_timeline_rounds_completed_by():
+    u, gc, tp = setup_gc()
+    ov = C.design_overlay("mst", gc, tp)
+    tl = simulate_overlay(gc, tp, ov.edges, num_rounds=50)
+    k = tl.rounds_completed_by(10 * ov.cycle_time_ms)
+    assert 5 <= k <= 12
