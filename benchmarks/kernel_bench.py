@@ -7,7 +7,9 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.maxplus_vec import batched_cycle_time, batched_cycle_time_jax
 from repro.kernels import ops, ref
 
 
@@ -46,6 +48,21 @@ def run() -> None:
     us = _bench(lambda: ops.mlstm_scan(q2, k2, v2, li, lf, chunk=128))
     us_ref = _bench(lambda: ref.mlstm_scan_ref(q2, k2, v2, li, lf))
     print(f"mlstm_scan_512,{us:.1f},ref_us={us_ref:.1f}")
+
+    # Batched max-plus cycle-time engine: XLA scan vs the numpy sweep.
+    rng = np.random.default_rng(0)
+    Bc, Nc = 256, 32
+    Wc = np.where(
+        rng.random((Bc, Nc, Nc)) < 0.2,
+        rng.uniform(0.5, 20.0, (Bc, Nc, Nc)),
+        -np.inf,
+    ).astype(np.float32)
+    idx = np.arange(Nc)
+    Wc[:, idx, (idx + 1) % Nc] = 1.0
+    cyc = jax.jit(batched_cycle_time_jax)
+    us = _bench(lambda: cyc(Wc))
+    us_ref = _bench(lambda: batched_cycle_time(Wc, dtype=np.float32))
+    print(f"batched_cycle_time_256x32,{us:.1f},numpy_us={us_ref:.1f}")
     print()
 
 

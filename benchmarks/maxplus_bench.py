@@ -1,0 +1,135 @@
+"""Old-vs-new max-plus throughput: legacy dict Karp vs the batched engine.
+
+Grid: N in {16, 64, 256} silos x B in {1, 128, 1024} candidate overlays.
+For each cell we time
+
+* ``legacy``  — per-overlay Python path: build a ``DelayDigraph`` from an
+                edge dict, Tarjan SCC, nested-loop Karp (what every call
+                to ``cycle_time`` did before the vectorized engine);
+* ``np64``    — one ``batched_cycle_time`` call on the ``[B, N, N]`` stack
+                (float64: bit-compatible with the legacy floats);
+* ``np32``    — same call with ``dtype=np.float32`` (search-grade scoring);
+* ``jax``     — the jitted ``batched_cycle_time_jax`` (f32, compile
+                excluded).
+
+Legacy timings at large (N, B) are measured on a subsample of the batch
+and scaled linearly (marked ``~`` in the table) — the whole point is that
+the legacy path is too slow to run 1024 x N=256 candidates.
+
+CSV: maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,speedup_best
+Acceptance target: >= 10x speedup at N=64, B=1024.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.maxplus import DelayDigraph, max_cycle_mean_legacy
+from repro.core.maxplus_vec import batched_cycle_time, batched_cycle_time_jax
+
+# Cap on how many graphs the legacy path actually evaluates per cell.
+_LEGACY_SAMPLE = {16: 128, 64: 32, 256: 4}
+
+
+def random_strong_batch(rng: np.random.Generator, n: int, b: int):
+    """B random strongly connected delay digraphs (ring + ~4N chords +
+    self loops), as both edge dicts (legacy) and a [B, N, N] stack."""
+    W = np.full((b, n, n), -np.inf)
+    dicts: List[Dict[Tuple[int, int], float]] = []
+    idx = np.arange(n)
+    for k in range(b):
+        d: Dict[Tuple[int, int], float] = {}
+        ring_w = rng.uniform(0.5, 20.0, n)
+        W[k, idx, (idx + 1) % n] = ring_w
+        for i in range(n):
+            d[(i, (i + 1) % n)] = float(ring_w[i])
+        self_w = rng.uniform(0.0, 5.0, n)
+        W[k, idx, idx] = self_w
+        for i in range(n):
+            d[(i, i)] = float(self_w[i])
+        chords = rng.integers(0, n, size=(4 * n, 2))
+        cw = rng.uniform(0.5, 20.0, 4 * n)
+        for (i, j), w in zip(chords, cw):
+            if i != j:
+                W[k, int(i), int(j)] = float(w)
+                d[(int(i), int(j))] = float(w)
+        dicts.append(d)
+    return dicts, W
+
+
+def _time(fn, repeats: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def run(assert_speedup: bool = True) -> None:
+    try:
+        import jax
+
+        jit_engine = jax.jit(batched_cycle_time_jax)
+        have_jax = True
+    except Exception:
+        have_jax = False
+
+    print("# max-plus engine throughput (ms per full candidate batch)")
+    print("maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,speedup_best")
+    checked = False
+    for n in (16, 64, 256):
+        for b in (1, 128, 1024):
+            rng = np.random.default_rng(1000 * n + b)
+            dicts, W = random_strong_batch(rng, n, b)
+
+            sample = min(b, _LEGACY_SAMPLE[n])
+            graphs = [
+                DelayDigraph(tuple(range(n)), d) for d in dicts[:sample]
+            ]
+            legacy_sample_ms = _time(
+                lambda: [max_cycle_mean_legacy(g) for g in graphs]
+            )
+            legacy_ms = legacy_sample_ms * (b / sample)
+            approx = "~" if sample < b else ""
+
+            np64_ms = _time(lambda: batched_cycle_time(W), repeats=2)
+            W32 = W.astype(np.float32)
+            np32_ms = _time(
+                lambda: batched_cycle_time(W32, dtype=np.float32), repeats=2
+            )
+
+            if have_jax:
+                jit_engine(W32).block_until_ready()  # compile
+                jax_ms = _time(
+                    lambda: jit_engine(W32).block_until_ready(), repeats=2
+                )
+                jax_str = f"{jax_ms:.2f}"
+            else:
+                jax_ms, jax_str = float("inf"), "n/a"
+
+            best = legacy_ms / min(np64_ms, np32_ms, jax_ms)
+            print(
+                f"maxplus,{n},{b},{approx}{legacy_ms:.2f},{np64_ms:.2f},"
+                f"{np32_ms:.2f},{jax_str},{best:.1f}"
+            )
+            if n == 64 and b == 1024:
+                checked = True
+                print(
+                    f"# acceptance N=64 B=1024: best speedup {best:.1f}x "
+                    f"(target >= 10x)"
+                )
+                if assert_speedup:
+                    assert best >= 10.0, (
+                        f"vectorized engine only {best:.1f}x faster than "
+                        "legacy at N=64, B=1024"
+                    )
+    assert checked
+    print()
+
+
+if __name__ == "__main__":
+    run()

@@ -10,9 +10,11 @@ def main() -> None:
     t0 = time.time()
     from . import table3, local_steps, access_links, speedup_vs_s
     from . import analytic, matcha_budget, table9, kernel_bench, gossip_bench
+    from . import maxplus_bench
 
     for mod in (table3, local_steps, access_links, speedup_vs_s, analytic,
-                matcha_budget, table9, gossip_bench, kernel_bench):
+                matcha_budget, table9, gossip_bench, kernel_bench,
+                maxplus_bench):
         name = mod.__name__.split(".")[-1]
         print(f"==== {name} " + "=" * (60 - len(name)))
         t = time.time()

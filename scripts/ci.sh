@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the full test suite must pass.
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"

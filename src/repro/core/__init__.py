@@ -6,11 +6,26 @@ from .maxplus import (
     cycle_time,
     throughput,
     max_cycle_mean,
+    max_cycle_mean_legacy,
     timing_recursion,
+    timing_recursion_legacy,
     empirical_cycle_time,
     critical_circuit,
     is_strongly_connected,
     strongly_connected_components,
+)
+from .maxplus_vec import (
+    batched_cycle_time,
+    batched_cycle_time_jax,
+    batched_is_strongly_connected,
+    batched_throughput,
+    batched_timing_recursion,
+    cycle_time_dense,
+    edges_to_matrix,
+    graph_to_matrix,
+    reachability_closure,
+    scc_labels,
+    timing_recursion_dense,
 )
 from .delays import (
     ConnectivityGraph,
@@ -20,6 +35,8 @@ from .delays import (
     connectivity_delay_ms,
     symmetrized_delay_ms,
     overlay_delay_digraph,
+    overlay_delay_matrix,
+    batched_overlay_delay_matrices,
     is_edge_capacitated,
 )
 from .underlay import Underlay, haversine_km, link_latency_ms
@@ -48,4 +65,10 @@ from .consensus import (
     spectral_gap,
 )
 from .birkhoff import birkhoff_decomposition, reconstruct, schedule_cost
-from .simulator import Timeline, simulate_overlay, predicted_cycle_time, training_time_ms
+from .simulator import (
+    Timeline,
+    simulate_overlay,
+    simulate_overlays_batched,
+    predicted_cycle_time,
+    training_time_ms,
+)

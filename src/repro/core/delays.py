@@ -16,9 +16,12 @@ A network is *edge-capacitated* when access-link sharing can be neglected
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, Mapping, Optional, Tuple
+from typing import Dict, Hashable, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .maxplus import DelayDigraph
+from .maxplus_vec import NEG_INF
 
 Node = Hashable
 Edge = Tuple[Node, Node]
@@ -157,6 +160,75 @@ def overlay_delay_digraph(
     for v in gc.silos:
         delays[(v, v)] = tp.local_steps * gc.silo_params[v].comp_time_ms
     return DelayDigraph(tuple(gc.silos), delays)
+
+
+def overlay_delay_matrix(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    overlay_edges,
+) -> np.ndarray:
+    """Dense ``[N, N]`` Eq. 3 delay matrix of one overlay (``-inf`` holes).
+
+    Row/column order follows ``gc.silos``; diagonal carries the self-loop
+    computation delays ``d_o(i, i) = s * T_c(i)``.  This is the matrix
+    form consumed by :mod:`repro.core.maxplus_vec`.
+    """
+    arcs = [e for e in overlay_edges if e[0] != e[1]]
+    for (i, j) in arcs:
+        if not gc.has_edge(i, j):
+            raise ValueError(f"overlay edge {(i, j)} not in connectivity graph")
+    masks = np.ones((1, len(arcs)), dtype=bool)
+    return batched_overlay_delay_matrices(gc, tp, arcs, masks)[0]
+
+
+def batched_overlay_delay_matrices(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    arcs: Sequence[Edge],
+    masks: np.ndarray,
+) -> np.ndarray:
+    """Eq. 3 delay matrices for a batch of candidate overlays at once.
+
+    ``arcs`` is the pool of distinct directed silo pairs and ``masks`` a
+    ``[B, E]`` boolean selection (candidate b uses arc e iff
+    ``masks[b, e]``).  Degrees — and therefore the access-link sharing
+    term of Eq. 3 — are recomputed per candidate, fully vectorized.
+    Returns ``[B, N, N]`` with ``-inf`` holes and self-loop diagonals.
+    """
+    n = gc.num_silos
+    index = {v: k for k, v in enumerate(gc.silos)}
+    masks = np.asarray(masks, dtype=bool)
+    B, E = masks.shape
+    if E != len(arcs):
+        raise ValueError(f"masks last dim {E} != number of arcs {len(arcs)}")
+    comp = np.array(
+        [tp.local_steps * gc.silo_params[v].comp_time_ms for v in gc.silos]
+    )
+    W = np.full((B, n, n), NEG_INF, dtype=np.float64)
+    idx = np.arange(n)
+    W[:, idx, idx] = comp[None, :]
+    if E == 0:
+        return W
+    src = np.array([index[i] for (i, _) in arcs])
+    dst = np.array([index[j] for (_, j) in arcs])
+    if np.any(src == dst):
+        raise ValueError("arc pool must not contain self-loops")
+    lat = np.array([gc.latency_ms[(i, j)] for (i, j) in arcs])
+    bwa = np.array([gc.available_bw_gbps[(i, j)] for (i, j) in arcs])
+    up = np.array([gc.silo_params[v].uplink_gbps for v in gc.silos])
+    dn = np.array([gc.silo_params[v].downlink_gbps for v in gc.silos])
+    # Per-candidate degrees: one boolean matmul against arc-endpoint one-hots.
+    eye = np.eye(n)
+    out_deg = masks @ eye[src]  # [B, N]
+    in_deg = masks @ eye[dst]
+    rate = np.minimum(
+        up[src][None, :] / np.maximum(out_deg[:, src], 1.0),
+        dn[dst][None, :] / np.maximum(in_deg[:, dst], 1.0),
+    )
+    rate = np.minimum(rate, bwa[None, :])
+    delay = comp[src][None, :] + lat[None, :] + tp.model_size_mbits / rate
+    W[:, src, dst] = np.where(masks, delay, NEG_INF)
+    return W
 
 
 def is_edge_capacitated(gc: ConnectivityGraph) -> bool:

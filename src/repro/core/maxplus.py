@@ -12,6 +12,15 @@ mean** of the weighted delay digraph (Eq. 5, [Baccelli et al., Thm 3.23]):
 
 over all circuits gamma. We compute it with Karp's algorithm [Karp 1978],
 which is exact and O(|V||E|). Throughput = 1 / tau.
+
+This module is the stable, node-labelled front end.  Since the vectorized
+engine landed, the heavy lifting (Karp, the timing recursion, strong
+connectivity) is delegated to :mod:`repro.core.maxplus_vec`, which runs
+the same DP as dense array sweeps and can score whole batches of
+candidate overlays at once.  The original pure-Python implementations are
+kept as ``*_legacy`` — they are the reference oracle for the old-vs-new
+equivalence property tests and the baseline for
+``benchmarks/maxplus_bench.py``.
 """
 
 from __future__ import annotations
@@ -19,6 +28,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import maxplus_vec as _vec
 
 Node = Hashable
 Edge = Tuple[Node, Node]
@@ -64,14 +77,23 @@ class DelayDigraph:
     def num_edges(self) -> int:
         return len(self.delays)
 
+    def to_matrix(self):
+        """Dense ``[N, N]`` weight matrix (``-inf`` holes) + node order."""
+        return _vec.graph_to_matrix(self)
+
 
 def max_cycle_mean(graph: DelayDigraph) -> float:
-    """Karp's algorithm for the maximum cycle mean of a digraph.
+    """Maximum cycle mean of a digraph (Karp; -inf for acyclic graphs).
 
-    Returns -inf for acyclic graphs.  Handles graphs that are not strongly
-    connected by running per strongly-connected-component (Karp requires
-    every node reachable from the source; we instead evaluate each SCC).
+    Delegates to the vectorized engine; ``max_cycle_mean_legacy`` is the
+    original dict-based implementation, kept as the equivalence oracle.
     """
+    W, _ = _vec.graph_to_matrix(graph)
+    return _vec.cycle_time_dense(W)
+
+
+def max_cycle_mean_legacy(graph: DelayDigraph) -> float:
+    """Original pure-Python Karp-per-SCC (reference / benchmark baseline)."""
     comp_means = [
         _karp_scc(graph, scc) for scc in strongly_connected_components(graph)
     ]
@@ -173,8 +195,8 @@ def strongly_connected_components(graph: DelayDigraph) -> List[List[Node]]:
 
 
 def is_strongly_connected(graph: DelayDigraph) -> bool:
-    sccs = strongly_connected_components(graph)
-    return len(sccs) == 1 and len(sccs[0]) == graph.num_nodes
+    W, _ = _vec.graph_to_matrix(graph)
+    return bool(_vec.batched_is_strongly_connected(W))
 
 
 def cycle_time(graph: DelayDigraph) -> float:
@@ -197,7 +219,22 @@ def timing_recursion(
 
     Returns ``{i: [t_i(0), ..., t_i(num_rounds)]}``.  The key theoretical
     property (tested): ``t_i(k) / k -> tau`` for every silo i.
+
+    Runs as a dense ``[N]``-state vector recursion; the dict-of-lists
+    return shape is preserved for callers.
     """
+    W, nodes = _vec.graph_to_matrix(graph)
+    init = None
+    if t0 is not None:
+        init = np.array([float(t0.get(v, 0.0)) for v in nodes])
+    series = _vec.timing_recursion_dense(W, num_rounds, init)
+    return {v: series[:, k].tolist() for k, v in enumerate(nodes)}
+
+
+def timing_recursion_legacy(
+    graph: DelayDigraph, num_rounds: int, t0: Optional[Mapping[Node, float]] = None
+) -> Dict[Node, List[float]]:
+    """Original dict-based Eq. 4 recursion (reference / benchmark baseline)."""
     preds: Dict[Node, List[Node]] = {v: [] for v in graph.nodes}
     for (i, j) in graph.delays:
         if i != j:

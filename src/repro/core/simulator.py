@@ -12,8 +12,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
 
-from .delays import ConnectivityGraph, TrainingParams, overlay_delay_digraph
-from .maxplus import DelayDigraph, cycle_time, timing_recursion
+import numpy as np
+
+from .delays import ConnectivityGraph, TrainingParams, overlay_delay_matrix
+from .maxplus_vec import (
+    batched_timing_recursion,
+    cycle_time_dense,
+    timing_recursion_dense,
+)
 
 Node = Hashable
 
@@ -49,9 +55,28 @@ def simulate_overlay(
     overlay_edges: Sequence[Tuple[Node, Node]],
     num_rounds: int = 100,
 ) -> Timeline:
-    dg = overlay_delay_digraph(gc, tp, overlay_edges)
-    times = timing_recursion(dg, num_rounds)
+    """Run Eq. 4 as a dense ``[N]``-state vector recursion (one
+    ``np.max`` sweep per round) and repackage per-silo series."""
+    W = overlay_delay_matrix(gc, tp, overlay_edges)
+    series = timing_recursion_dense(W, num_rounds)  # [R+1, N]
+    times = {v: series[:, k].tolist() for k, v in enumerate(gc.silos)}
     return Timeline(times=times, num_rounds=num_rounds)
+
+
+def simulate_overlays_batched(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    overlays: Sequence[Sequence[Tuple[Node, Node]]],
+    num_rounds: int = 100,
+) -> np.ndarray:
+    """Timelines for many candidate overlays in one engine call.
+
+    Returns ``[B, num_rounds + 1, N]`` start times (silo order =
+    ``gc.silos``) — the bulk companion of :func:`simulate_overlay` for
+    scenario sweeps.
+    """
+    W = np.stack([overlay_delay_matrix(gc, tp, e) for e in overlays])
+    return batched_timing_recursion(W, num_rounds)
 
 
 def predicted_cycle_time(
@@ -59,7 +84,7 @@ def predicted_cycle_time(
     tp: TrainingParams,
     overlay_edges: Sequence[Tuple[Node, Node]],
 ) -> float:
-    return cycle_time(overlay_delay_digraph(gc, tp, overlay_edges))
+    return cycle_time_dense(overlay_delay_matrix(gc, tp, overlay_edges))
 
 
 def training_time_ms(

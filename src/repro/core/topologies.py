@@ -29,16 +29,23 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, FrozenSet, Hashable, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, FrozenSet, Hashable, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from .delays import (
     ConnectivityGraph,
     TrainingParams,
+    batched_overlay_delay_matrices,
     node_capacitated_sym_delay_ms,
-    overlay_delay_digraph,
+    overlay_delay_matrix,
     symmetrized_delay_ms,
 )
-from .maxplus import DelayDigraph, cycle_time, is_strongly_connected
+from .maxplus_vec import (
+    batched_cycle_time,
+    batched_is_strongly_connected,
+    cycle_time_dense,
+)
 
 Node = Hashable
 Edge = Tuple[Node, Node]
@@ -66,10 +73,10 @@ class Overlay:
 def evaluate_overlay(
     gc: ConnectivityGraph, tp: TrainingParams, edges: Sequence[Edge], name: str = "custom"
 ) -> Overlay:
-    dg = overlay_delay_digraph(gc, tp, edges)
-    if not is_strongly_connected(dg):
+    W = overlay_delay_matrix(gc, tp, edges)
+    if not batched_is_strongly_connected(W):
         raise ValueError(f"overlay {name!r} is not strongly connected")
-    return Overlay(name=name, edges=tuple(edges), cycle_time_ms=cycle_time(dg))
+    return Overlay(name=name, edges=tuple(edges), cycle_time_ms=cycle_time_dense(W))
 
 
 def _sym_edges(gc: ConnectivityGraph) -> List[Tuple[Node, Node]]:
@@ -384,17 +391,64 @@ def algorithm1_mbst(gc: ConnectivityGraph, tp: TrainingParams) -> Overlay:
             candidates.append((f"{delta}-prim", delta_prim(gc, weight, delta)))
         except ValueError:
             continue
-    best: Optional[Overlay] = None
-    for (name, tree) in candidates:
-        ov = evaluate_overlay(gc, tp, _bidir(tree), name=f"dmbst[{name}]")
-        if best is None or ov.cycle_time_ms < best.cycle_time_ms:
-            best = ov
-    assert best is not None
-    return Overlay(name="delta_mbst", edges=best.edges, cycle_time_ms=best.cycle_time_ms)
+    # Score every candidate in one batched engine call.
+    cand_edges = [_bidir(tree) for (_, tree) in candidates]
+    W = np.stack([overlay_delay_matrix(gc, tp, e) for e in cand_edges])
+    strong = batched_is_strongly_connected(W)
+    taus = np.where(strong, batched_cycle_time(W), np.inf)
+    k = int(np.argmin(taus))
+    if not np.isfinite(taus[k]):
+        raise ValueError("no strongly-connected delta-MBST candidate")
+    return Overlay(
+        name="delta_mbst", edges=tuple(cand_edges[k]), cycle_time_ms=float(taus[k])
+    )
 
 
 # ---------------------------------------------------------------------------
 # Exact solver (for tests on small instances)
+
+
+def _best_masked_candidate(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    arcs: List[Edge],
+    subsets: Iterable[Tuple[int, ...]],
+    best_tau: float,
+    best_rows: Optional[List[int]],
+    *,
+    batch: int = 4096,
+) -> Tuple[float, Optional[List[int]]]:
+    """Scan candidate arc-index subsets in batched engine calls.
+
+    Returns the best (cycle time, arc-index list) seen, seeded with the
+    incoming incumbent.  Non-strongly-connected candidates are skipped.
+    """
+    E = len(arcs)
+    buf: List[Tuple[int, ...]] = []
+
+    def flush() -> Tuple[float, Optional[List[int]]]:
+        nonlocal best_tau, best_rows
+        masks = np.zeros((len(buf), E), dtype=bool)
+        for k, subset in enumerate(buf):
+            masks[k, list(subset)] = True
+        W = batched_overlay_delay_matrices(gc, tp, arcs, masks)
+        strong = np.nonzero(batched_is_strongly_connected(W))[0]
+        if strong.size:
+            taus = batched_cycle_time(W[strong])
+            k = int(np.argmin(taus))
+            if taus[k] < best_tau:
+                best_tau = float(taus[k])
+                best_rows = list(buf[int(strong[k])])
+        buf.clear()
+        return best_tau, best_rows
+
+    for subset in subsets:
+        buf.append(subset)
+        if len(buf) >= batch:
+            best_tau, best_rows = flush()
+    if buf:
+        best_tau, best_rows = flush()
+    return best_tau, best_rows
 
 
 def brute_force_mct(
@@ -403,40 +457,55 @@ def brute_force_mct(
     *,
     undirected: bool = False,
     max_nodes: int = 7,
+    exhaustive: bool = True,
+    batch: int = 4096,
 ) -> Overlay:
-    """Enumerate strong spanning subdigraphs; exponential — tests only."""
+    """Exact MCT solver by enumeration (exponential — tests/small N only).
+
+    Candidates are scored through the batched max-plus engine, thousands
+    of overlays per call.  With ``exhaustive=True`` (default) every arc
+    count is enumerated, which is required for a *certificate* of
+    optimality: minimally strong digraphs can have up to 2(N-1) arcs
+    (e.g. bidirected trees), so the legacy heuristic cut at ``r >= N + 2``
+    arcs could return a suboptimal overlay.  Pass ``exhaustive=False`` to
+    re-enable that cut as a cheap heuristic.
+    """
     n = gc.num_silos
     if n > max_nodes:
         raise ValueError("brute force limited to tiny instances")
+    best_tau = math.inf
+    best_rows: Optional[List[int]] = None
     if undirected:
         pairs = _sym_edges(gc)
-        best: Optional[Overlay] = None
+        arcs = _bidir(pairs)  # pair p -> arc rows 2p, 2p+1
         for r in range(n - 1, len(pairs) + 1):
-            for subset in itertools.combinations(pairs, r):
-                edges = _bidir(subset)
-                try:
-                    ov = evaluate_overlay(gc, tp, edges, name="bf")
-                except ValueError:
-                    continue
-                if best is None or ov.cycle_time_ms < best.cycle_time_ms:
-                    best = ov
-        assert best is not None
-        return best
+            subsets = (
+                tuple(a for p in combo for a in (2 * p, 2 * p + 1))
+                for combo in itertools.combinations(range(len(pairs)), r)
+            )
+            best_tau, best_rows = _best_masked_candidate(
+                gc, tp, arcs, subsets, best_tau, best_rows, batch=batch
+            )
+        assert best_rows is not None
+        edges = tuple(arcs[a] for a in best_rows)
+        return Overlay(name="bf", edges=edges, cycle_time_ms=best_tau)
     arcs = [e for e in gc.edges() if e[0] != e[1]]
-    best = None
     # Prune: a strong digraph needs >= n arcs.
     for r in range(n, len(arcs) + 1):
-        for subset in itertools.combinations(arcs, r):
-            try:
-                ov = evaluate_overlay(gc, tp, list(subset), name="bf")
-            except ValueError:
-                continue
-            if best is None or ov.cycle_time_ms < best.cycle_time_ms:
-                best = ov
-        if best is not None and r >= n + 2:
-            break  # heuristic cut: adding arcs rarely helps beyond small r
-    assert best is not None
-    return best
+        best_tau, best_rows = _best_masked_candidate(
+            gc,
+            tp,
+            arcs,
+            itertools.combinations(range(len(arcs)), r),
+            best_tau,
+            best_rows,
+            batch=batch,
+        )
+        if not exhaustive and best_rows is not None and r >= n + 2:
+            break  # heuristic cut: may miss optima that need many arcs
+    assert best_rows is not None
+    edges = tuple(arcs[a] for a in best_rows)
+    return Overlay(name="bf", edges=edges, cycle_time_ms=best_tau)
 
 
 # ---------------------------------------------------------------------------

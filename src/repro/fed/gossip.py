@@ -31,6 +31,21 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.birkhoff import birkhoff_decomposition
 
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+
+    def _shard_map(fn, mesh, in_specs, out_specs):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+
+else:  # jax 0.4.x: experimental API, check_rep instead of check_vma
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(fn, mesh, in_specs, out_specs):
+        return _exp_shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+
 
 @dataclass(frozen=True)
 class GossipPlan:
@@ -71,6 +86,7 @@ def gossip_shard_map(
     axis: str,
     *,
     use_pallas: bool = False,
+    pallas_interpret: Optional[bool] = None,  # None = auto (TPU compiled)
     extra_spec: Tuple = (),
 ) -> Any:
     """Apply the Birkhoff ppermute schedule over mesh axis ``axis``.
@@ -94,7 +110,7 @@ def gossip_shard_map(
 
     def mix_tree(tree):
         if use_pallas:
-            return _pallas_mix_tree(tree, plan, axis)
+            return _pallas_mix_tree(tree, plan, axis, interpret=pallas_interpret)
         return jax.tree_util.tree_map(local_mix, tree)
 
     spec = P(axis, *extra_spec) if extra_spec else P(axis)
@@ -102,14 +118,18 @@ def gossip_shard_map(
     leaves, treedef = jax.tree_util.tree_flatten(params)
     specs = [P(axis, *([None] * (l.ndim - 1))) for l in leaves]
     in_spec = jax.tree_util.tree_unflatten(treedef, specs)
-    fn = jax.shard_map(mix_tree, mesh=mesh, in_specs=(in_spec,),
-                       out_specs=in_spec, check_vma=False)
+    fn = _shard_map(mix_tree, mesh, (in_spec,), in_spec)
     return fn(params)
 
 
-def _pallas_mix_tree(tree: Any, plan: GossipPlan, axis: str) -> Any:
+def _pallas_mix_tree(
+    tree: Any, plan: GossipPlan, axis: str, *, interpret: Optional[bool] = None
+) -> Any:
     """Gather neighbour copies via ppermute, then run the fused Pallas
-    K-way combine over the flattened parameter vector."""
+    K-way combine over the flattened parameter vector.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter on CPU.
+    """
     from repro.kernels import ops as kops
 
     ident = tuple(range(plan.n_silos))
@@ -125,7 +145,8 @@ def _pallas_mix_tree(tree: Any, plan: GossipPlan, axis: str) -> Any:
         else:
             stack.append(jax.lax.ppermute(flat, axis, _perm_to_pairs(perm)))
         weights.append(coeff)
-    mixed = kops.gossip_mix(jnp.stack(stack), jnp.asarray(weights, jnp.float32))
+    mixed = kops.gossip_mix(jnp.stack(stack), jnp.asarray(weights, jnp.float32),
+                            interpret=interpret)
     out = []
     offset = 0
     for shape, size in zip(shapes, sizes):

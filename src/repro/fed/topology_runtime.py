@@ -7,7 +7,7 @@ paper's algorithms, derive the consensus matrix, and compile it into a
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Hashable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -15,18 +15,88 @@ from repro.core.consensus import local_degree_matrix, ring_matrix
 from repro.core.topologies import Overlay
 from .gossip import GossipPlan
 
+Node = Hashable
+
+
+def _silo_index(overlay: Overlay, n_silos: int,
+                silos: Optional[Sequence[Node]]) -> Dict[Node, int]:
+    """Map silo labels -> mesh positions 0..n-1.
+
+    Silo ids need not be a 0-based contiguous int range (string labels,
+    sparse ids).  The caller can fix the mesh order via ``silos``;
+    otherwise the labels found on the overlay edges are sorted for a
+    deterministic assignment.
+    """
+    labels = {v for e in overlay.edges for v in e}
+    if silos is None:
+        try:
+            silos = sorted(labels)
+        except TypeError:  # mixed label types
+            silos = sorted(labels, key=repr)
+    else:
+        missing = labels - set(silos)
+        if missing:
+            raise ValueError(
+                f"overlay uses silo labels not in `silos`: {sorted(missing, key=repr)}"
+            )
+    if len(silos) != n_silos:
+        raise ValueError(
+            f"overlay spans {len(silos)} silos but n_silos={n_silos}"
+        )
+    return {v: k for k, v in enumerate(silos)}
+
+
+def _ring_tour(edges: Sequence[Tuple[int, int]], n_silos: int) -> list:
+    """Recover the tour order of a directed ring from its edge list.
+
+    Starts from ``edges[0][0]`` (node 0 may not exist), walks the
+    successor map, and validates that the walk closes into a single
+    Hamiltonian cycle covering every silo.
+    """
+    nxt: Dict[int, int] = {}
+    for (i, j) in edges:
+        if i in nxt:
+            raise ValueError(
+                f"not a ring overlay: silo {i} has out-degree > 1"
+            )
+        nxt[i] = j
+    if len(nxt) != n_silos:
+        raise ValueError(
+            f"not a ring overlay: {len(nxt)} edges for {n_silos} silos"
+        )
+    start = edges[0][0]
+    tour = [start]
+    cur = start
+    for _ in range(n_silos):
+        cur = nxt.get(cur)
+        if cur is None:
+            raise ValueError(f"broken ring: no successor for silo {tour[-1]}")
+        if cur == start:
+            break
+        tour.append(cur)
+    else:
+        raise ValueError("broken ring: walk does not close into a cycle")
+    if len(tour) != n_silos:
+        raise ValueError(
+            f"ring tour covers {len(tour)} of {n_silos} silos "
+            "(disconnected sub-rings?)"
+        )
+    return tour
+
 
 def plan_from_overlay(overlay: Overlay, n_silos: int,
-                      kind: Optional[str] = None) -> GossipPlan:
-    """Consensus matrix per Appendix G.3 -> Birkhoff ppermute schedule."""
+                      kind: Optional[str] = None,
+                      silos: Optional[Sequence[Node]] = None) -> GossipPlan:
+    """Consensus matrix per Appendix G.3 -> Birkhoff ppermute schedule.
+
+    ``silos`` optionally pins the silo-label -> mesh-position order;
+    by default labels are taken from the overlay edges and sorted.
+    """
     name = kind or overlay.name
-    edges = [(int(i), int(j)) for (i, j) in overlay.edges]
+    index = _silo_index(overlay, n_silos, silos)
+    edges = [(index[i], index[j]) for (i, j) in overlay.edges]
     if name.startswith("ring"):
-        # recover the tour order from the directed edges
-        nxt = {i: j for (i, j) in edges}
-        tour = [0]
-        while len(tour) < n_silos:
-            tour.append(nxt[tour[-1]])
+        tour = _ring_tour(edges, n_silos)
         A = ring_matrix(n_silos, tour)
     elif name == "star":
         # FedAvg: full averaging each (two-phase) round

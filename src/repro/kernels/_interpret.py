@@ -1,0 +1,28 @@
+"""Shared interpret-mode resolution for the Pallas kernels.
+
+``interpret=None`` everywhere means *auto*: lower via Mosaic when the
+default backend is a TPU, fall back to the Pallas interpreter otherwise
+(this CPU container).  ``REPRO_PALLAS_COMPILE=1`` forces compilation
+regardless of backend (useful under ``jax.experimental`` CPU lowering or
+when the backend probe is wrong).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Explicit True/False wins; None auto-detects."""
+    if interpret is None:
+        return interpret_default()
+    return bool(interpret)

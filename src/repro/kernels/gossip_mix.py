@@ -21,10 +21,13 @@ the accumulator) cuts HBM traffic by ~2x for K>=2.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._interpret import resolve_interpret
 
 
 def _mix_kernel(w_ref, lam_ref, o_ref, *, n_neighbors: int):
@@ -40,8 +43,9 @@ def gossip_mix_pallas(
     weights: jax.Array,          # [K] fp32 mixing coefficients
     *,
     block: int = 65536,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compiled on TPU, interpret on CPU
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     K, N = neighbor_blocks.shape
     assert weights.shape == (K,)
     pad = (-N) % block

@@ -1,27 +1,22 @@
 """Jitted public wrappers around the Pallas kernels.
 
-On CPU (this container) the kernels run in interpret mode; on TPU set
-``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to lower via Mosaic.
+Interpret mode is auto-detected: compiled via Mosaic on TPU, Pallas
+interpreter on CPU (this container).  ``REPRO_PALLAS_COMPILE=1`` forces
+compilation; ``gossip_mix`` also takes an explicit ``interpret`` flag.
 """
 
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ._interpret import interpret_default as _interpret_default, resolve_interpret
 from .flash_attention import flash_attention_pallas
 from .gossip_mix import gossip_mix_pallas
 from .mlstm_scan import mlstm_scan_pallas
-
-
-def _interpret_default() -> bool:
-    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
-        return False
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
@@ -43,10 +38,11 @@ def flash_attention(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def gossip_mix(neighbor_blocks: jax.Array, weights: jax.Array, *, block: int = 65536):
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gossip_mix(neighbor_blocks: jax.Array, weights: jax.Array, *,
+               block: int = 65536, interpret: Optional[bool] = None):
     return gossip_mix_pallas(neighbor_blocks, weights, block=block,
-                             interpret=_interpret_default())
+                             interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -44,6 +44,7 @@ def main() -> int:
     from repro.configs import get_config
     from repro.data import SyntheticLMStream, FederatedBatcher
     from repro.fed import DPASGDConfig, init_state, make_train_step
+    from repro.launch.mesh import compat_make_mesh, mesh_context
     from repro.fed.topology_runtime import plan_for_n_silos
     from repro.optim import momentum
 
@@ -54,8 +55,7 @@ def main() -> int:
 
     cfg = dataclasses.replace(cfg, n_silos=args.silos)
     n = args.silos
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((n,), ("data",))
     opt = momentum(args.lr, 0.9)
     plan = plan_for_n_silos(args.topology, n) if n > 1 else None
     fed = DPASGDConfig(local_steps=args.local_steps,
@@ -75,7 +75,7 @@ def main() -> int:
     batcher = FederatedBatcher(stream, args.local_steps, args.batch_per_silo)
     jstep = jax.jit(step_fn)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for i in range(args.steps):
             b = {k: jnp.asarray(v) for k, v in batcher.batch(i).items()}
             state, metrics = jstep(state, b)

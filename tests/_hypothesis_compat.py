@@ -1,0 +1,137 @@
+"""Hypothesis compatibility layer for the test suite.
+
+When the real ``hypothesis`` package is installed it is re-exported
+unchanged.  When it is missing (the CI container does not ship it), a
+minimal fallback degrades ``@given`` to a *deterministic* sample sweep:
+each example draws from a ``random.Random`` seeded by the test's
+qualified name and the example index, so failures are reproducible and
+runs are hermetic.
+
+Only the API surface the suite actually uses is emulated:
+
+    given, settings, strategies.{integers, floats, lists, sampled_from,
+    data, booleans, tuples}
+
+Shrinking, targeted search, and the database are intentionally absent —
+this is a degraded mode whose job is to keep the property tests running
+(and meaningful) without the dependency, not to replace Hypothesis.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random as _random
+
+    _DEFAULT_MAX_EXAMPLES = 15
+    # Deterministic sweeps explore less per example than Hypothesis'
+    # guided search would; cap the sweep so degraded mode stays fast.
+    _MAX_EXAMPLES_CAP = 25
+
+    class _Strategy:
+        def __init__(self, sample: Callable[[_random.Random], Any]):
+            self._sample = sample
+
+        def sample(self, rng: _random.Random) -> Any:
+            return self._sample(rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: None)
+
+    class _DataObject:
+        """Stand-in for hypothesis' interactive ``data`` fixture."""
+
+        def __init__(self, rng: _random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy, label: Optional[str] = None) -> Any:
+            return strategy.sample(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements: Sequence[Any]) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def lists(
+            elements: _Strategy, *, min_size: int = 0, max_size: int = 10
+        ) -> _Strategy:
+            def sample(rng: _random.Random) -> List[Any]:
+                size = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*parts: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(p.sample(rng) for p in parts))
+
+        @staticmethod
+        def data() -> _DataStrategy:
+            return _DataStrategy()
+
+    strategies = _Strategies()
+
+    def given(*strats: _Strategy):
+        def decorate(fn):
+            def wrapper():
+                seed_base = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode()
+                )
+                n = min(
+                    getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES),
+                    _MAX_EXAMPLES_CAP,
+                )
+                for idx in range(n):
+                    rng = _random.Random(seed_base + idx)
+                    args = [
+                        _DataObject(rng) if isinstance(s, _DataStrategy) else s.sample(rng)
+                        for s in strats
+                    ]
+                    try:
+                        fn(*args)
+                    except Exception as exc:  # reattach the failing example
+                        raise AssertionError(
+                            f"falsifying example #{idx} of {fn.__qualname__}: "
+                            f"args={args!r}"
+                        ) from exc
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorate
+
+    def settings(*, max_examples: Optional[int] = None, **_ignored):
+        """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate

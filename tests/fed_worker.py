@@ -27,9 +27,11 @@ def small_cfg(n_silos):
     return ModelConfig("tiny", "dense", 2, 64, 2, 2, 128, 256, n_silos=n_silos)
 
 
+from repro.launch.mesh import compat_make_mesh, mesh_context as mesh_ctx
+
+
 def make_mesh(n):
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat_make_mesh((n,), ("data",))
 
 
 def shard_state(state, mesh):
@@ -51,7 +53,7 @@ def check_gossip_impls_agree():
     for kind in ("ring", "star", "chain"):
         plan = plan_for_n_silos(kind, n)
         A = jnp.asarray(plan.matrix)
-        with jax.set_mesh(mesh):
+        with mesh_ctx(mesh):
             ein = gossip_einsum(params, A)
             ppm = gossip_shard_map(params, plan, mesh, "data")
             pal = gossip_shard_map(params, plan, mesh, "data", use_pallas=True)
@@ -77,7 +79,7 @@ def check_dpasgd_trains_and_converges():
     batcher = FederatedBatcher(stream, local_steps=2, batch_per_silo=4)
     jstep = jax.jit(step_fn)
     losses = []
-    with jax.set_mesh(mesh):
+    with mesh_ctx(mesh):
         for i in range(8):
             b = {k: jnp.asarray(v) for k, v in batcher.batch(i).items()}
             state, m = jstep(state, b)
@@ -112,7 +114,7 @@ def check_full_mixing_equals_single_worker():
     one = stream.sample(0, 4, 0)
     batch = {k: jnp.broadcast_to(jnp.asarray(v)[None, None], (n, 1) + v.shape)
              for k, v in one.items()}
-    with jax.set_mesh(mesh):
+    with mesh_ctx(mesh):
         state, _ = jax.jit(step_fn)(state, batch)
     from repro.fed.dpasgd import local_sgd_steps, make_loss_fn
 

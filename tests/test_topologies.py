@@ -5,7 +5,7 @@ import math
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 import repro.core as C
 from repro.core.delays import ConnectivityGraph, SiloParams, TrainingParams
@@ -137,6 +137,44 @@ def test_property_slower_access_never_helps(n, seed):
         fast = C.design_overlay(kind, random_euclidean_gc(n, seed, access=10.0), TP)
         slow = C.design_overlay(kind, random_euclidean_gc(n, seed, access=0.1), TP)
         assert slow.cycle_time_ms >= fast.cycle_time_ms - 1e-9
+
+
+def test_brute_force_heuristic_cut_is_opt_in_and_unsound():
+    """Regression for the unsound ``r >= n + 2`` early exit.
+
+    Minimally strong digraphs can need up to 2(N-1) arcs (bidirected
+    trees), so stopping at n+2 arcs can certify a suboptimal overlay.
+    Construction: hub + 4 leaves, hub<->leaf latency 1, the single
+    leaf-leaf pair latency 100, bandwidth effectively unlimited.  Every
+    strong overlay with <= n+2 = 7 arcs must contain a directed circuit
+    of length >= 3, which must use the latency-100 link (tau >= 34);
+    the bidirected star needs 8 arcs and achieves tau ~= 1.
+    """
+    hub, leaves = "h", ["l1", "l2", "l3", "l4"]
+    silos = tuple([hub] + leaves)
+    lat, bw = {}, {}
+
+    def link(a, b, latency):
+        for (i, j) in ((a, b), (b, a)):
+            lat[(i, j)] = latency
+            bw[(i, j)] = 1e6
+
+    for l in leaves:
+        link(hub, l, 1.0)
+    link("l1", "l2", 100.0)
+    params = {v: SiloParams(0.0, 1e6, 1e6) for v in silos}
+    gc = ConnectivityGraph(silos, lat, bw, params)
+    tp = TrainingParams(model_size_mbits=1e-6, local_steps=0)
+
+    exact = brute_force_mct(gc, tp)  # exhaustive by default now
+    cut = brute_force_mct(gc, tp, exhaustive=False)
+    assert exact.cycle_time_ms == pytest.approx(1.0, rel=1e-3)
+    assert cut.cycle_time_ms == pytest.approx(102.0 / 3.0, rel=1e-3)
+    assert exact.cycle_time_ms < cut.cycle_time_ms
+    # the certified optimum is the bidirected star
+    assert set(exact.edges) == {(hub, l) for l in leaves} | {
+        (l, hub) for l in leaves
+    }
 
 
 def test_table3_reproduction_bands():

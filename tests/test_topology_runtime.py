@@ -1,0 +1,62 @@
+"""plan_from_overlay: ring-tour recovery must survive non-contiguous and
+non-integer silo labels, and fail loudly on malformed rings."""
+
+import numpy as np
+import pytest
+
+from repro.core.topologies import Overlay
+from repro.fed.topology_runtime import plan_from_overlay
+
+
+def _ring(edges):
+    return Overlay(name="ring", edges=tuple(edges), cycle_time_ms=1.0)
+
+
+def test_string_labeled_ring():
+    ov = _ring([("tokyo", "paris"), ("paris", "lyon"), ("lyon", "tokyo")])
+    plan = plan_from_overlay(ov, 3)
+    A = plan.matrix
+    assert A.shape == (3, 3)
+    # (I + P)/2: doubly stochastic with exactly two 1/2 entries per row
+    np.testing.assert_allclose(A.sum(0), 1.0)
+    np.testing.assert_allclose(A.sum(1), 1.0)
+    assert np.count_nonzero(A) == 6
+    # order pinning: explicit silo order must transpose consistently
+    plan2 = plan_from_overlay(ov, 3, silos=["paris", "lyon", "tokyo"])
+    assert plan2.matrix.shape == (3, 3)
+
+
+def test_ring_not_through_node_zero_and_sparse_ids():
+    # silo ids 5, 17, 42 — no node 0, not contiguous
+    ov = _ring([(17, 42), (42, 5), (5, 17)])
+    plan = plan_from_overlay(ov, 3)
+    np.testing.assert_allclose(plan.matrix.sum(0), 1.0)
+    assert plan.num_transfers == 1  # a ring is a single ppermute
+
+
+def test_broken_ring_raises_instead_of_hanging():
+    # walk closes early: 2-cycle + isolated pair => not one Hamiltonian tour
+    ov = _ring([("a", "b"), ("b", "a"), ("c", "d"), ("d", "c")])
+    with pytest.raises(ValueError, match="ring"):
+        plan_from_overlay(ov, 4)
+
+
+def test_double_out_degree_raises():
+    ov = _ring([("a", "b"), ("a", "c"), ("b", "a"), ("c", "a")])
+    with pytest.raises(ValueError, match="out-degree"):
+        plan_from_overlay(ov, 3)
+
+
+def test_silo_count_mismatch_raises():
+    ov = _ring([("a", "b"), ("b", "a")])
+    with pytest.raises(ValueError, match="n_silos"):
+        plan_from_overlay(ov, 5)
+
+
+def test_non_ring_overlays_with_string_labels():
+    edges = [("a", "b"), ("b", "a"), ("b", "c"), ("c", "b")]
+    ov = Overlay(name="mst", edges=tuple(edges), cycle_time_ms=1.0)
+    plan = plan_from_overlay(ov, 3)
+    A = plan.matrix
+    np.testing.assert_allclose(A.sum(0), 1.0)
+    np.testing.assert_allclose(A.sum(1), 1.0)
