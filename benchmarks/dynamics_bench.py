@@ -1,0 +1,104 @@
+"""Dynamics subsystem throughput: online re-design and scenario simulation.
+
+Two hot paths gate how far inside the training loop the controller can
+live:
+
+* **re-design latency** — one controller actuation on AWS North America
+  (N=22): every designer heuristic plus a >=256-candidate batched ring
+  search.  Acceptance: under 1 s wall clock (it is ~two orders under).
+  Reported as candidates/sec.
+* **simulator throughput** — batched piecewise recursion over a fleet of
+  seeded random scenarios (B x [E, N, N] epoch stacks), reported as
+  scenario-rounds/sec.
+
+CSV: dynamics,<metric>,<value>,<derived>; ``run()`` returns the metrics
+dict that ``benchmarks.run --json`` serializes (BENCH_dynamics.json).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+import repro.core as C
+from repro.dynamics import (
+    design_best_overlay,
+    random_scenario,
+    simulate_scenarios_batched,
+)
+
+REDESIGN_CANDIDATES = 256
+SIM_SCENARIOS = 64
+SIM_ROUNDS = 200
+
+
+def bench_redesign(n_candidates: int = REDESIGN_CANDIDATES) -> Dict[str, float]:
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    u = C.make_underlay("aws_na")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    rng = np.random.default_rng(0)
+    # one warmup (numpy allocator, design caches nothing but page faults do)
+    design_best_overlay(gc, tp, n_candidates=n_candidates, rng=rng)
+    best = float("inf")
+    scored = 0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, scored = design_best_overlay(gc, tp, n_candidates=n_candidates, rng=rng)
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "network": u.name,
+        "num_silos": u.num_silos,
+        "candidates": scored,
+        "redesign_s": best,
+        "candidates_per_sec": scored / best,
+    }
+
+
+def bench_simulator(
+    n_scenarios: int = SIM_SCENARIOS, num_rounds: int = SIM_ROUNDS
+) -> Dict[str, float]:
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    overlay = C.design_overlay("ring", gc, tp)
+    horizon = num_rounds * overlay.cycle_time_ms
+    scenarios = [
+        random_scenario(u, Tc, seed=s, horizon_ms=horizon)
+        for s in range(n_scenarios)
+    ]
+    t0 = time.perf_counter()
+    times = simulate_scenarios_batched(scenarios, tp, overlay.edges, num_rounds)
+    elapsed = time.perf_counter() - t0
+    assert times.shape == (n_scenarios, num_rounds + 1, u.num_silos)
+    total = n_scenarios * num_rounds
+    return {
+        "network": u.name,
+        "scenarios": n_scenarios,
+        "rounds": num_rounds,
+        "simulate_s": elapsed,
+        "scenario_rounds_per_sec": total / elapsed,
+    }
+
+
+def run() -> Dict[str, Dict[str, float]]:
+    print("# dynamics: online re-design + event-driven simulator")
+    rd = bench_redesign()
+    print(f"dynamics,redesign_ms,{rd['redesign_s']*1e3:.1f},"
+          f"N={rd['num_silos']} candidates={rd['candidates']}")
+    print(f"dynamics,candidates_per_sec,{rd['candidates_per_sec']:.0f},")
+    assert rd["redesign_s"] < 1.0, (
+        f"re-design took {rd['redesign_s']:.2f}s (budget: 1s)")
+    sim = bench_simulator()
+    print(f"dynamics,simulate_ms,{sim['simulate_s']*1e3:.1f},"
+          f"B={sim['scenarios']} R={sim['rounds']}")
+    print(f"dynamics,scenario_rounds_per_sec,"
+          f"{sim['scenario_rounds_per_sec']:.0f},")
+    return {"redesign": rd, "simulator": sim}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,25 +1,45 @@
 # One function per paper table/figure. Prints aligned tables plus
-# ``name,us_per_call,derived`` CSV lines for the scalar benches.
+# ``name,us_per_call,derived`` CSV lines for the scalar benches; benches
+# that return a metrics dict feed the machine-readable --json report.
+import argparse
+import json
 import os
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write collected bench metrics to this JSON file")
+    ap.add_argument("--only", default="",
+                    help="run only benches whose module name contains this")
+    args = ap.parse_args()
+
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     t0 = time.time()
     from . import table3, local_steps, access_links, speedup_vs_s
     from . import analytic, matcha_budget, table9, kernel_bench, gossip_bench
-    from . import maxplus_bench
+    from . import maxplus_bench, dynamics_bench
 
+    metrics = {}
     for mod in (table3, local_steps, access_links, speedup_vs_s, analytic,
                 matcha_budget, table9, gossip_bench, kernel_bench,
-                maxplus_bench):
+                maxplus_bench, dynamics_bench):
         name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
         print(f"==== {name} " + "=" * (60 - len(name)))
         t = time.time()
-        mod.run()
+        out = mod.run()
+        if isinstance(out, dict):
+            metrics[name] = out
         print(f"[{name} done in {time.time()-t:.1f}s]\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"metrics -> {args.json}")
     print(f"ALL BENCHMARKS DONE in {time.time()-t0:.1f}s")
 
 

@@ -1,0 +1,130 @@
+"""Online topology re-design under a mid-training core-link failure.
+
+Gaia underlay (11 AWS regions), iNaturalist workload.  The designed RING
+overlay is throughput-optimal for the measured network; a third of the
+way into training the core link its busiest hop rides on fails, traffic
+re-routes the long way round, and the realized round time detaches from
+the max-plus prediction.  We compare:
+
+* **non-adaptive** — the paper's open-loop pipeline: keep the original
+  overlay to the deadline;
+* **adaptive**     — the online controller: detect the regression,
+  re-design on the updated estimate (batched candidate scoring), hot-swap
+  the gossip plan;
+* **oracle**       — re-design instantly at the failure with full
+  knowledge of the post-failure network (static-optimal bound).
+
+The controller should recover >= 80% of the oracle's post-failure
+throughput; it typically lands within a few percent, paying only the
+detection lag.
+
+    PYTHONPATH=src python examples/dynamic_topology.py [--workload femnist]
+"""
+
+import argparse
+
+import repro.core as C
+from repro.dynamics import (
+    ControllerConfig,
+    DynamicTimeline,
+    OnlineTopologyController,
+    active_subgraph,
+    design_best_overlay,
+    link_failure_scenario,
+    simulate_dynamic,
+)
+
+
+def run_adaptive(scenario, tp, gc0, overlay, deadline_ms, seed=0):
+    timeline = DynamicTimeline(scenario, tp)
+    timeline.set_overlay(overlay.edges)
+    controller = OnlineTopologyController(
+        gc0, tp, overlay,
+        config=ControllerConfig(seed=seed),
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active),
+    )
+    while timeline.now_ms < deadline_ms:
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_overlay(redesign.overlay.edges)
+            print(f"  [controller] round {redesign.round_idx} "
+                  f"(t={timeline.now_ms/1e3:.1f}s): measured "
+                  f"{redesign.measured_ms:.1f} ms/round >> prediction; "
+                  f"re-designed -> {redesign.overlay.name} "
+                  f"(tau {redesign.predicted_tau_ms:.1f} ms, "
+                  f"{redesign.n_candidates} candidates scored in "
+                  f"{redesign.elapsed_s*1e3:.0f} ms)")
+            print(f"  [controller] new bottleneck circuit: "
+                  f"{'-'.join(map(str, redesign.bottleneck))}")
+    return timeline, controller
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="inaturalist", choices=list(C.WORKLOADS))
+    ap.add_argument("--rounds", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    M, Tc = C.WORKLOADS[args.workload]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    u = C.make_underlay("gaia")
+    gc0 = u.connectivity_graph(comp_time_ms=Tc)
+    overlay = C.design_overlay("ring", gc0, tp)
+    print(f"gaia x {args.workload}: designed {overlay.name}, "
+          f"tau = {overlay.cycle_time_ms:.1f} ms")
+
+    deadline_ms = args.rounds * overlay.cycle_time_ms
+    t_fail_ms = deadline_ms / 3
+    scenario = link_failure_scenario(
+        u, Tc, t_fail_ms=t_fail_ms, overlay_edges=overlay.edges,
+        horizon_ms=deadline_ms)
+    failed = scenario.events[0].link
+    print(f"scenario: core link {failed} "
+          f"({C.GAIA_SITES[failed[0]][0]}-{C.GAIA_SITES[failed[1]][0]}) "
+          f"fails at t={t_fail_ms/1e3:.1f}s; deadline {deadline_ms/1e3:.1f}s\n")
+
+    # Non-adaptive baseline: the original overlay to the deadline.
+    base = simulate_dynamic(scenario, tp, overlay.edges,
+                            num_rounds=2 * args.rounds)
+
+    # Oracle bound: static-optimal overlay for the post-failure network.
+    post_gc = scenario.segments()[-1].gc
+    oracle, _ = design_best_overlay(post_gc, tp, rng=None)
+    print(f"post-failure: old overlay tau {base.predicted_tau_ms[-1]:.1f} ms, "
+          f"static-optimal (oracle) tau {oracle.cycle_time_ms:.1f} ms")
+
+    # Adaptive: monitor -> detect -> re-design -> hot-swap.
+    timeline, controller = run_adaptive(
+        scenario, tp, gc0, overlay, deadline_ms, seed=args.seed)
+
+    window_ms = deadline_ms - t_fail_ms
+    finish = timeline.round_finish_ms
+    adaptive_rounds = sum(1 for f in finish[1:]
+                          if t_fail_ms < f <= deadline_ms)
+    base_rounds = (base.rounds_completed_by(deadline_ms)
+                   - base.rounds_completed_by(t_fail_ms))
+    oracle_thr = 1e3 / oracle.cycle_time_ms
+    adaptive_thr = 1e3 * adaptive_rounds / window_ms
+    base_thr = 1e3 * base_rounds / window_ms
+    recovery = adaptive_thr / oracle_thr
+
+    print(f"\npost-failure window ({window_ms/1e3:.1f}s):")
+    print(f"  {'policy':14s} {'rounds':>7s} {'rounds/s':>9s} {'vs oracle':>10s}")
+    print(f"  {'oracle':14s} {window_ms/oracle.cycle_time_ms:7.1f} "
+          f"{oracle_thr:9.2f} {'100.0%':>10s}")
+    print(f"  {'adaptive':14s} {adaptive_rounds:7d} {adaptive_thr:9.2f} "
+          f"{100*recovery:9.1f}%")
+    print(f"  {'non-adaptive':14s} {base_rounds:7d} {base_thr:9.2f} "
+          f"{100*base_thr/oracle_thr:9.1f}%")
+    assert recovery >= 0.80, (
+        f"controller recovered only {100*recovery:.1f}% of static-optimal")
+    assert adaptive_rounds > base_rounds, "adaptive did not beat non-adaptive"
+    print(f"\ncontroller recovered {100*recovery:.1f}% of the static-optimal "
+          f"throughput ({adaptive_rounds - base_rounds:+d} rounds vs "
+          f"non-adaptive)")
+
+
+if __name__ == "__main__":
+    main()

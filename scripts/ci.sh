@@ -4,4 +4,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Property tests silently degrade to deterministic compat-shim sweeps when
+# hypothesis is missing (tests/_hypothesis_compat.py) — make sure CI runs
+# the real thing.  Offline/airgapped runs fall back to the shim with a
+# visible warning instead of failing before any test runs.
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  python -m pip install -q -r requirements-dev.txt ||
+    echo "WARN: could not install requirements-dev.txt;" \
+         "property tests will use the compat-shim sweeps" >&2
+fi
 python -m pytest -x -q "$@"

@@ -11,6 +11,7 @@ from .maxplus import (
     timing_recursion_legacy,
     empirical_cycle_time,
     critical_circuit,
+    critical_circuit_legacy,
     is_strongly_connected,
     strongly_connected_components,
 )
@@ -20,12 +21,15 @@ from .maxplus_vec import (
     batched_is_strongly_connected,
     batched_throughput,
     batched_timing_recursion,
+    batched_timing_recursion_piecewise,
+    critical_circuit_dense,
     cycle_time_dense,
     edges_to_matrix,
     graph_to_matrix,
     reachability_closure,
     scc_labels,
     timing_recursion_dense,
+    timing_recursion_piecewise,
 )
 from .delays import (
     ConnectivityGraph,
@@ -40,7 +44,13 @@ from .delays import (
     is_edge_capacitated,
 )
 from .underlay import Underlay, haversine_km, link_latency_ms
-from .networks_data import make_underlay, NETWORK_NAMES, EXPECTED_SIZES, WORKLOADS
+from .networks_data import (
+    GAIA_SITES,
+    make_underlay,
+    NETWORK_NAMES,
+    EXPECTED_SIZES,
+    WORKLOADS,
+)
 from .topologies import (
     Overlay,
     design_overlay,

@@ -268,9 +268,27 @@ def empirical_cycle_time(graph: DelayDigraph, num_rounds: int = 200) -> float:
 def critical_circuit(graph: DelayDigraph) -> Tuple[float, List[Node]]:
     """Return (tau, circuit) where circuit attains the max cycle mean.
 
-    Uses the standard reduction: binary search over tau combined with
-    Bellman-Ford positive-cycle detection on weights (w - tau).  For exact
-    recovery we run Karp for tau then find a cycle with zero reduced mean.
+    Delegates to :func:`repro.core.maxplus_vec.critical_circuit_dense`
+    (array-sweep potentials + boolean-closure cycle location); the
+    original per-edge Bellman-Ford implementation is kept below as
+    ``critical_circuit_legacy``, the equivalence oracle.
+    """
+    W, nodes = _vec.graph_to_matrix(graph)
+    tau, circuit = _vec.critical_circuit_dense(W)
+    if circuit:
+        return tau, [nodes[c] for c in circuit]
+    if tau == _NEG_INF:
+        return tau, []
+    return critical_circuit_legacy(graph)  # numerically degenerate fallback
+
+
+def critical_circuit_legacy(graph: DelayDigraph) -> Tuple[float, List[Node]]:
+    """Original per-edge Bellman-Ford critical-circuit recovery
+    (reference oracle for :func:`critical_circuit`).
+
+    Uses the standard reduction: run Karp for tau, relax longest-path
+    potentials under the reduced weights (w - tau), then search the tight
+    subgraph for a zero-reduced-mean cycle.
     """
     tau = max_cycle_mean(graph)
     if tau == _NEG_INF:

@@ -103,6 +103,56 @@ class Underlay:
         path.reverse()
         return path
 
+    def pair_metrics(
+        self,
+        *,
+        core_capacity_gbps: Optional[Mapping[Tuple[int, int], float]] = None,
+        silos: Optional[Sequence[int]] = None,
+        skip_unreachable: bool = False,
+    ) -> Tuple[Dict[Tuple[int, int], float], Dict[Tuple[int, int], float]]:
+        """(latency_ms, available_bw_gbps) of every routed ordered silo pair.
+
+        The single place the Sect. 2.2 path pricing lives: end-to-end
+        latency = 2 access links + per-hop core latencies along the
+        distance-routed shortest path; available bandwidth = min core-link
+        capacity on that path.  ``core_capacity_gbps`` overrides per-link
+        capacities (keyed by the sorted router pair — used by the dynamics
+        layer for degraded links); ``silos`` restricts the pair set;
+        ``skip_unreachable`` drops partitioned pairs instead of raising.
+        """
+        sp = self.shortest_paths()
+        access_lat = link_latency_ms(self.access_distance_km)
+        nodes = range(self.num_silos) if silos is None else sorted(silos)
+        latency: Dict[Tuple[int, int], float] = {}
+        avail: Dict[Tuple[int, int], float] = {}
+        for i in nodes:
+            dist, pred = sp[i]
+            for j in nodes:
+                if i == j:
+                    continue
+                if math.isinf(dist[j]):
+                    if skip_unreachable:
+                        continue
+                    raise ValueError(
+                        f"{self.name}: no path {i}->{j} (disconnected underlay)"
+                    )
+                path = self.path_nodes(pred, i, j)
+                lat = 2 * access_lat
+                bw = math.inf
+                for (u, v) in zip(path[:-1], path[1:]):
+                    lat += link_latency_ms(haversine_km(self.coords[u], self.coords[v]))
+                    if core_capacity_gbps is None:
+                        bw = min(bw, self.core_capacity_gbps)
+                    else:
+                        key = (u, v) if u <= v else (v, u)
+                        bw = min(
+                            bw,
+                            core_capacity_gbps.get(key, self.core_capacity_gbps),
+                        )
+                latency[(i, j)] = lat
+                avail[(i, j)] = bw
+        return latency, avail
+
     def connectivity_graph(
         self,
         comp_time_ms: float,
@@ -114,23 +164,7 @@ class Underlay:
         """Derive the full-mesh connectivity graph over the silos."""
         access = access_capacity_gbps if access_capacity_gbps is not None else self.access_capacity_gbps
         n = self.num_silos
-        sp = self.shortest_paths()
-        access_lat = link_latency_ms(self.access_distance_km)
-        latency: Dict[Tuple[int, int], float] = {}
-        avail: Dict[Tuple[int, int], float] = {}
-        for i in range(n):
-            dist, pred = sp[i]
-            for j in range(n):
-                if i == j:
-                    continue
-                path = self.path_nodes(pred, i, j)
-                # per-link latencies along core path + 2 access links
-                lat = 2 * access_lat
-                for (u, v) in zip(path[:-1], path[1:]):
-                    lat += link_latency_ms(haversine_km(self.coords[u], self.coords[v]))
-                latency[(i, j)] = lat
-                # available bandwidth: min core-link capacity on the path
-                avail[(i, j)] = self.core_capacity_gbps if len(path) > 1 else self.core_capacity_gbps
+        latency, avail = self.pair_metrics()
         params: Dict[int, SiloParams] = {}
         for i in range(n):
             cap = access if per_silo_access_gbps is None else per_silo_access_gbps.get(i, access)

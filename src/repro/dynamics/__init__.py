@@ -1,0 +1,73 @@
+"""Dynamic-network subsystem: time-varying underlays, event-driven
+simulation, and online topology re-design.
+
+The paper's pipeline (Sect. 2-4) is *open-loop*: measure the network
+(Sect. 2.2), price every connectivity edge with the Eq. 3 delay model,
+design a throughput-optimal overlay via the max-plus cycle time
+(Sect. 2.3 / Eq. 5), and train on it forever.  Real cross-silo
+deployments drift — bandwidth degrades, core links fail, silos straggle,
+join, and leave — so the designed overlay's realized throughput decays
+while a better overlay exists on the changed network.  This subsystem
+closes the loop, in three layers:
+
+* :mod:`~repro.dynamics.events` — **scenario model**.  A typed event
+  stream (:class:`LinkDegraded`, :class:`LinkFailed`, :class:`LinkRestored`,
+  :class:`SiloJoin`, :class:`SiloLeave`, :class:`ComputeStraggler`, plus
+  seeded random generators) folds over an
+  :class:`~repro.core.underlay.Underlay` into piecewise-constant
+  :class:`NetworkEpoch` segments, each with a freshly re-routed
+  :class:`~repro.core.delays.ConnectivityGraph` — the Sect. 2.2
+  measurement pipeline re-run per epoch.
+
+* :mod:`~repro.dynamics.simulate` — **event-driven simulator**.  Extends
+  the Eq. 4 max-plus timing recursion (Sect. 2.3) from one delay matrix
+  to an ``[E, N, N]`` per-epoch stack, batched over whole scenario sweeps
+  through :func:`repro.core.maxplus_vec.batched_timing_recursion_piecewise`.
+  Reports realized round times, per-epoch cycle times, and throughput
+  loss against the static-optimal overlay.
+
+* :mod:`~repro.dynamics.controller` — **online controller**.  Watches
+  measured round durations against the max-plus prediction, and on
+  sustained regression re-runs topology design (Sect. 3/4 designers plus
+  a batched random-ring search — hundreds of candidates in one
+  ``batched_cycle_time`` call) on the updated connectivity estimate,
+  explains the new bottleneck via the critical circuit, and hot-swaps the
+  resulting :class:`~repro.fed.gossip.GossipPlan` through a
+  :class:`~repro.fed.gossip.PlanSlot`.
+
+``examples/dynamic_topology.py`` runs the whole stack on a Gaia
+core-link failure; ``benchmarks/dynamics_bench.py`` tracks re-design
+latency (candidates/sec) and simulator throughput (scenario-rounds/sec).
+"""
+
+from .events import (
+    ComputeStraggler,
+    LinkDegraded,
+    LinkFailed,
+    LinkRestored,
+    NetworkEpoch,
+    NetworkEvent,
+    NetworkState,
+    Scenario,
+    SiloJoin,
+    SiloLeave,
+    active_subgraph,
+    busiest_core_link,
+    link_failure_scenario,
+    random_scenario,
+    static_scenario,
+)
+from .simulate import (
+    DynamicRun,
+    DynamicTimeline,
+    epoch_delay_matrices,
+    simulate_dynamic,
+    simulate_scenarios_batched,
+)
+from .controller import (
+    ControllerConfig,
+    OnlineTopologyController,
+    Redesign,
+    design_best_overlay,
+    search_ring_candidates,
+)

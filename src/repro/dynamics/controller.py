@@ -1,0 +1,305 @@
+"""Online topology re-design controller.
+
+Closes the loop the paper leaves open: the designed overlay is
+throughput-optimal for the network *as measured*, so when the network
+drifts (failure, degradation, straggler, churn) the measured round time
+detaches from the max-plus prediction.  The controller
+
+1. **monitors** realized round durations against the simulated max-plus
+   round-time profile of the active overlay (a rolling window, a
+   two-sided deviation ratio — slow rounds mean congestion, suspiciously
+   fast rounds mean vanished arcs — and a strike count to ignore
+   one-off jitter);
+2. on sustained regression, pulls a fresh connectivity estimate from the
+   measurement service and **re-designs**: every Table 1 designer plus
+   hundreds of seeded ring perturbations, all scored in one call to the
+   batched max-plus engine (`[B, N, N]` Karp — re-scoring ~256 overlays
+   at N=22 takes well under a second, cheap enough to live inside the
+   training loop);
+3. **explains** the winning overlay's bottleneck via the (vectorized)
+   critical circuit — the links that throttle throughput;
+4. **emits** the new :class:`~repro.fed.gossip.GossipPlan` through
+   :func:`~repro.fed.topology_runtime.plan_from_overlay` into a
+   :class:`~repro.fed.gossip.PlanSlot`, the hot-swap hook the training
+   loop re-lowers its jitted step from.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.delays import (
+    ConnectivityGraph,
+    TrainingParams,
+    batched_overlay_delay_matrices,
+    overlay_delay_matrix,
+)
+from ..core.maxplus_vec import (
+    batched_cycle_time,
+    batched_is_strongly_connected,
+    critical_circuit_dense,
+    timing_recursion_dense,
+)
+from ..core.topologies import Overlay, design_overlay
+from ..fed.gossip import GossipPlan, PlanSlot
+from ..fed.topology_runtime import plan_from_overlay
+
+Arc = Tuple[int, int]
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    window: Optional[int] = None  # rolling-mean span; None = one ring period (N)
+    regression_ratio: float = 1.04  # measured / predicted-profile max triggering a strike
+    patience: int = 2  # consecutive regressed rounds before re-design
+    cooldown_rounds: int = 12  # min rounds between re-designs
+    warmup_rounds: Optional[int] = None  # rounds ignored after init/swap; None = window
+    calibration_rounds: int = 64  # simulated rounds behind the expected profile
+    n_candidates: int = 256  # seeded ring perturbations per re-design
+    designers: Tuple[str, ...] = ("ring", "ring_2opt", "mst", "delta_mbst")
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class Redesign:
+    """One controller actuation, with its audit trail."""
+
+    round_idx: int
+    overlay: Overlay
+    plan: GossipPlan
+    predicted_tau_ms: float
+    measured_ms: float  # rolling round-duration estimate that tripped it
+    n_candidates: int  # overlays scored by the batched engine
+    elapsed_s: float  # wall time of the whole re-design step
+    bottleneck: Tuple[int, ...]  # critical circuit of the new overlay
+
+
+def search_ring_candidates(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    n_candidates: int,
+    rng: np.random.Generator,
+) -> Optional[Overlay]:
+    """Score ``n_candidates`` random ring tours in one batched engine call.
+
+    Rings are the paper's asymptotically dominant family (Prop. 3.3), and
+    as N-arc overlays they are the cheapest candidates to mass-produce;
+    the designer heuristics cover the tree-shaped part of the space.
+    Returns the best strongly-connected tour (None if every tour hits an
+    unrouted pair — e.g. a partitioned network)."""
+    silos = list(gc.silos)
+    n = len(silos)
+    if n < 2 or n_candidates == 0:
+        return None
+    arcs = [e for e in gc.edges() if e[0] != e[1]]
+    arc_index = {a: k for k, a in enumerate(arcs)}
+    masks = np.zeros((n_candidates, len(arcs)), dtype=bool)
+    tours: List[Optional[List[Arc]]] = []
+    for b in range(n_candidates):
+        perm = rng.permutation(n)
+        tour = [silos[p] for p in perm]
+        hops = [(tour[k], tour[(k + 1) % n]) for k in range(n)]
+        rows = [arc_index.get(h) for h in hops]
+        if any(r is None for r in rows):
+            tours.append(None)  # tour uses an unrouted pair; leave mask empty
+            continue
+        masks[b, rows] = True
+        tours.append(hops)
+    W = batched_overlay_delay_matrices(gc, tp, arcs, masks)
+    valid = np.array([t is not None for t in tours])
+    strong = batched_is_strongly_connected(W) & valid
+    taus = np.where(strong, batched_cycle_time(W), np.inf)
+    k = int(np.argmin(taus))
+    if not np.isfinite(taus[k]):
+        return None
+    return Overlay(
+        name="ring_search", edges=tuple(tours[k]), cycle_time_ms=float(taus[k])
+    )
+
+
+def design_best_overlay(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    n_candidates: int = 256,
+    designers: Sequence[str] = ControllerConfig.designers,
+    rng: Optional[np.random.Generator] = None,
+) -> Tuple[Overlay, int]:
+    """(best overlay, number of candidates scored) on the given estimate.
+
+    Candidates = each designer heuristic (skipping any that cannot run on
+    the current graph, e.g. δ-MBST on a partitioned estimate) plus the
+    batched random-ring search."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    candidates: List[Overlay] = []
+    scored = 0
+    for kind in designers:
+        try:
+            candidates.append(design_overlay(kind, gc, tp))
+            scored += 1
+        except (ValueError, KeyError):
+            continue
+    ring = search_ring_candidates(gc, tp, n_candidates, rng)
+    scored += n_candidates
+    if ring is not None:
+        candidates.append(ring)
+    if not candidates:
+        raise ValueError("no feasible overlay candidate on the current estimate")
+    return min(candidates, key=lambda ov: ov.cycle_time_ms), scored
+
+
+class OnlineTopologyController:
+    """Monitor -> detect -> re-design -> hot-swap, one overlay at a time.
+
+    ``connectivity_provider`` is the measurement service: it returns the
+    current connectivity estimate (restricted to active silos) whenever
+    the controller decides to re-design.  In the simulator it is backed by
+    the scenario's current epoch; in a deployment it would be the same
+    probing that produced the initial measurements (Sect. 2.2).
+    """
+
+    def __init__(
+        self,
+        gc: ConnectivityGraph,
+        tp: TrainingParams,
+        overlay: Overlay,
+        *,
+        config: ControllerConfig = ControllerConfig(),
+        connectivity_provider: Optional[Callable[[], ConnectivityGraph]] = None,
+        plan_slot: Optional[PlanSlot] = None,
+    ):
+        self.tp = tp
+        self.config = config
+        self.gc = gc
+        self.overlay = overlay
+        self.predicted_tau_ms = overlay.cycle_time_ms
+        self.connectivity_provider = connectivity_provider
+        self.plan_slot = plan_slot
+        self.plan = plan_from_overlay(overlay, len(gc.silos), silos=gc.silos)
+        if plan_slot is not None and plan_slot.version == 0:
+            plan_slot.swap(self.plan, label="controller-init")
+        self._rng = np.random.default_rng(config.seed)
+        self._window_size = config.window or len(gc.silos)
+        self._warmup = (
+            config.warmup_rounds
+            if config.warmup_rounds is not None
+            else self._window_size
+        )
+        self._window: Deque[float] = deque(maxlen=self._window_size)
+        self._strikes = 0
+        self._round = 0
+        self._rounds_since_swap = 0
+        self._last_redesign = -config.cooldown_rounds
+        self.redesigns: List[Redesign] = []
+        self._calibrate()
+
+    def _calibrate(self) -> None:
+        """Expected rolling round-time profile of the active overlay on the
+        current estimate, from the Eq. 4 recursion itself.
+
+        Max-plus round durations are not constant — they settle into a
+        periodic regime oscillating around tau — so comparing a measured
+        rolling mean against bare tau false-alarms on healthy networks.
+        Simulating the recursion gives the *whole* predicted profile; the
+        detector thresholds against its worst settled rolling mean, which
+        lets ``regression_ratio`` sit a few percent above 1."""
+        W = overlay_delay_matrix(self.gc, self.tp, self.overlay.edges)
+        w = self._window_size
+        rounds = max(self.config.calibration_rounds, 3 * w)
+        times = timing_recursion_dense(W, rounds)
+        durations = np.diff(times.max(axis=1))
+        rolling = np.convolve(durations, np.ones(w) / w, mode="valid")
+        settled = rolling[min(w, len(rolling) - 1) :]
+        self.expected_window_ms = float(settled.max())
+        self.expected_window_min_ms = float(settled.min())
+
+    @property
+    def measured_ms(self) -> Optional[float]:
+        if len(self._window) < self._window_size:
+            return None
+        return float(np.mean(self._window))
+
+    def observe_round(self, duration_ms: float) -> Optional[Redesign]:
+        """Feed one realized round duration; maybe returns an actuation."""
+        self._round += 1
+        self._rounds_since_swap += 1
+        if self._rounds_since_swap <= self._warmup:
+            return None  # swap transient: not the network's fault
+        self._window.append(duration_ms)
+        measured = self.measured_ms
+        if measured is None:
+            return None
+        # Two-sided: slower-than-predicted means congestion/failure/straggler;
+        # *faster*-than-predicted means arcs silently vanished (e.g. a silo
+        # left and the ring broke) — rounds speed up while mixing stops.
+        # Either way the max-plus model is stale and the overlay needs
+        # re-designing on a fresh estimate.
+        ratio = self.config.regression_ratio
+        deviates = (
+            measured > ratio * self.expected_window_ms
+            or measured < self.expected_window_min_ms / ratio
+        )
+        self._strikes = self._strikes + 1 if deviates else 0
+        if self._strikes < self.config.patience:
+            return None
+        if self._round - self._last_redesign < self.config.cooldown_rounds:
+            return None
+        return self._redesign(measured)
+
+    def _redesign(self, measured: float) -> Redesign:
+        t0 = time.perf_counter()
+        if self.connectivity_provider is not None:
+            self.gc = self.connectivity_provider()
+        best, scored = design_best_overlay(
+            self.gc,
+            self.tp,
+            n_candidates=self.config.n_candidates,
+            designers=self.config.designers,
+            rng=self._rng,
+        )
+        W = overlay_delay_matrix(self.gc, self.tp, best.edges)
+        tau, circ = critical_circuit_dense(W)
+        bottleneck = tuple(self.gc.silos[c] for c in circ)
+        plan = plan_from_overlay(best, len(self.gc.silos), silos=self.gc.silos)
+        elapsed = time.perf_counter() - t0
+        if self.plan_slot is not None:
+            if plan.n_silos == self.plan_slot.plan.n_silos:
+                self.plan_slot.swap(plan, label=f"round{self._round}:{best.name}")
+            else:
+                # Churn changed the silo count but the slot's mesh axis is
+                # sized at launch and cannot follow (ROADMAP follow-up:
+                # rebuild mesh/state on SiloJoin/SiloLeave).  Keep the old
+                # plan running and leave an audit note instead of crashing
+                # the training loop from inside observe_round.
+                self.plan_slot.history.append(
+                    (
+                        self.plan_slot.version,
+                        f"round{self._round}:{best.name} NOT swapped "
+                        f"({plan.n_silos} != {self.plan_slot.plan.n_silos} silos)",
+                    )
+                )
+        self.overlay = best
+        self.plan = plan
+        self.predicted_tau_ms = best.cycle_time_ms
+        self._window.clear()
+        self._strikes = 0
+        self._rounds_since_swap = 0
+        self._last_redesign = self._round
+        self._calibrate()
+        redesign = Redesign(
+            round_idx=self._round,
+            overlay=best,
+            plan=plan,
+            predicted_tau_ms=best.cycle_time_ms,
+            measured_ms=measured,
+            n_candidates=scored,
+            elapsed_s=elapsed,
+            bottleneck=bottleneck,
+        )
+        self.redesigns.append(redesign)
+        return redesign

@@ -1,0 +1,220 @@
+"""Event-driven simulator: the Eq. 4 recursion on a time-varying network.
+
+Extends Algorithm 3 (Appendix F) from one delay matrix to the ``[E, N, N]``
+stack of per-epoch Eq. 3 matrices produced by the scenario layer.  Each
+round, every silo transmits with the delays of the epoch containing its
+start time (rows of the effective matrix are gathered per silo — see
+:func:`repro.core.maxplus_vec.timing_recursion_piecewise`), so failures
+and stragglers show up as transients exactly at the event boundary.
+
+Three entry points:
+
+* :func:`simulate_dynamic`          — one (scenario, overlay) run with full
+                                      reporting: realized round times,
+                                      per-epoch empirical vs predicted
+                                      cycle times, throughput loss vs the
+                                      static-optimal overlay;
+* :func:`simulate_scenarios_batched`— many scenarios at once through
+                                      ``batched_timing_recursion_piecewise``
+                                      (epoch grids padded to a common E);
+* :class:`DynamicTimeline`          — a round-by-round stepper with a
+                                      swappable overlay: the plant the
+                                      online controller closes its loop
+                                      around.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.delays import ConnectivityGraph, TrainingParams, overlay_delay_matrix
+from ..core.maxplus_vec import (
+    NEG_INF,
+    _epoch_of,
+    batched_cycle_time,
+    batched_timing_recursion_piecewise,
+)
+from .events import NetworkEpoch, Scenario
+
+Arc = Tuple[int, int]
+
+
+def _epoch_matrix(
+    epoch: NetworkEpoch, tp: TrainingParams, overlay_edges: Sequence[Arc]
+) -> np.ndarray:
+    """Eq. 3 delay matrix of one epoch, overlay arcs filtered to the pairs
+    that still exist (both endpoints active, pair routed)."""
+    keep = set(epoch.active)
+    arcs = [
+        (i, j)
+        for (i, j) in overlay_edges
+        if i != j and i in keep and j in keep and epoch.gc.has_edge(i, j)
+    ]
+    return overlay_delay_matrix(epoch.gc, tp, arcs)
+
+
+def epoch_delay_matrices(
+    scenario: Scenario, tp: TrainingParams, overlay_edges: Sequence[Arc]
+) -> Tuple[np.ndarray, np.ndarray, List[NetworkEpoch]]:
+    """``([E, N, N] delay stack, [E] epoch starts, epochs)`` for a fixed
+    overlay riding through the scenario."""
+    epochs = scenario.segments()
+    Ws = np.stack([_epoch_matrix(e, tp, overlay_edges) for e in epochs])
+    starts = np.array([e.t_start_ms for e in epochs])
+    return Ws, starts, epochs
+
+
+@dataclass(frozen=True)
+class DynamicRun:
+    """Result of one (scenario, overlay) simulation."""
+
+    times: np.ndarray  # [R+1, N] silo start times
+    round_finish_ms: np.ndarray  # [R+1] max over silos
+    round_durations_ms: np.ndarray  # [R] finish-to-finish increments
+    epoch_starts_ms: np.ndarray  # [E]
+    predicted_tau_ms: np.ndarray  # [E] Karp cycle time of each epoch matrix
+    empirical_tau_ms: np.ndarray  # [E] realized slope inside each epoch (nan if <4 rounds)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.round_durations_ms)
+
+    def rounds_completed_by(self, t_ms: float) -> int:
+        """Max k such that every silo has started round k by ``t_ms``."""
+        return int(np.searchsorted(self.round_finish_ms, t_ms, side="right")) - 1
+
+    def throughput_loss_vs(self, tau_static_ms: float, deadline_ms: float) -> float:
+        """1 - realized/ideal rounds by the deadline, against an idealized
+        static network where every round costs ``tau_static_ms``."""
+        ideal = deadline_ms / tau_static_ms
+        return 1.0 - self.rounds_completed_by(deadline_ms) / ideal
+
+
+def simulate_dynamic(
+    scenario: Scenario,
+    tp: TrainingParams,
+    overlay_edges: Sequence[Arc],
+    num_rounds: int = 200,
+) -> DynamicRun:
+    """Ride a *fixed* overlay through the scenario (the non-adaptive
+    baseline an online controller is judged against)."""
+    Ws, starts, _ = epoch_delay_matrices(scenario, tp, overlay_edges)
+    times = batched_timing_recursion_piecewise(
+        Ws[None], starts[None], num_rounds
+    )[0]
+    finish = times.max(axis=1)
+    predicted = np.atleast_1d(batched_cycle_time(Ws))
+    empirical = _per_epoch_slopes(finish, starts)
+    return DynamicRun(
+        times=times,
+        round_finish_ms=finish,
+        round_durations_ms=np.diff(finish),
+        epoch_starts_ms=starts,
+        predicted_tau_ms=predicted,
+        empirical_tau_ms=empirical,
+    )
+
+
+def _per_epoch_slopes(finish: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """Realized cycle time inside each epoch: slope of the round-finish
+    sequence over the rounds fully contained in the epoch (with one round
+    of settling after the boundary; nan when fewer than 4 rounds land)."""
+    E = len(starts)
+    bounds = np.append(starts, np.inf)
+    out = np.full(E, np.nan)
+    for e in range(E):
+        inside = np.nonzero(
+            (finish >= bounds[e]) & (finish < bounds[e + 1])
+        )[0]
+        if len(inside) >= 4:
+            ks = inside[1:]  # drop the boundary-straddling round
+            out[e] = (finish[ks[-1]] - finish[ks[0]]) / (ks[-1] - ks[0])
+    return out
+
+
+def simulate_scenarios_batched(
+    scenarios: Sequence[Scenario],
+    tp: TrainingParams,
+    overlay_edges: Sequence[Arc],
+    num_rounds: int = 200,
+) -> np.ndarray:
+    """``[B, R+1, N]`` start times for one overlay under many scenarios.
+
+    Scenarios must share the silo universe; epoch grids are padded to a
+    common depth by repeating each scenario's final epoch (a start of
+    ``+inf`` is never selected by the epoch gather)."""
+    n = scenarios[0].num_silos
+    if any(s.num_silos != n for s in scenarios):
+        raise ValueError("batched scenarios must share one silo universe")
+    stacks = [epoch_delay_matrices(s, tp, overlay_edges)[:2] for s in scenarios]
+    E = max(Ws.shape[0] for Ws, _ in stacks)
+    B = len(scenarios)
+    Ws_all = np.full((B, E, n, n), NEG_INF)
+    starts_all = np.full((B, E), np.inf)
+    for b, (Ws, starts) in enumerate(stacks):
+        e = Ws.shape[0]
+        Ws_all[b, :e] = Ws
+        Ws_all[b, e:] = Ws[-1]
+        starts_all[b, :e] = starts
+    return batched_timing_recursion_piecewise(Ws_all, starts_all, num_rounds)
+
+
+class DynamicTimeline:
+    """Round-by-round stepper over a scenario, with a hot-swappable overlay.
+
+    This is the *plant* for closed-loop control: the training loop calls
+    :meth:`step` once per communication round and reads off the realized
+    duration (what a wall clock would measure); the controller may call
+    :meth:`set_overlay` between rounds, which rebuilds the per-epoch delay
+    stack while preserving the current silo start times — models swapped
+    mid-flight keep their progress.
+    """
+
+    def __init__(self, scenario: Scenario, tp: TrainingParams):
+        self.scenario = scenario
+        self.tp = tp
+        self.epochs = scenario.segments()
+        self.starts = np.array([e.t_start_ms for e in self.epochs])
+        self.t = np.zeros(scenario.num_silos)
+        self.round_finish_ms: List[float] = [0.0]
+        self.overlay_edges: Optional[Tuple[Arc, ...]] = None
+        self._Weff: Optional[np.ndarray] = None
+
+    @property
+    def now_ms(self) -> float:
+        return self.round_finish_ms[-1]
+
+    @property
+    def rounds_done(self) -> int:
+        return len(self.round_finish_ms) - 1
+
+    def set_overlay(self, overlay_edges: Sequence[Arc]) -> None:
+        self.overlay_edges = tuple(overlay_edges)
+        Ws = np.stack(
+            [_epoch_matrix(e, self.tp, self.overlay_edges) for e in self.epochs]
+        )
+        idx = np.arange(Ws.shape[-1])
+        diag = Ws[:, idx, idx]
+        Ws[:, idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
+        self._Weff = Ws
+
+    def current_epoch(self) -> NetworkEpoch:
+        """Epoch containing the current round front — what a measurement
+        service would report if probed right now."""
+        e = int(_epoch_of(self.starts, np.array([self.now_ms]))[0])
+        return self.epochs[e]
+
+    def step(self) -> float:
+        """Advance one communication round; return its realized duration."""
+        if self._Weff is None:
+            raise RuntimeError("set_overlay() before stepping")
+        e = _epoch_of(self.starts, self.t)  # [N] epoch per sender
+        Wk = self._Weff[e, np.arange(len(self.t)), :]
+        self.t = np.max(self.t[:, None] + Wk, axis=0)
+        finish = float(self.t.max())
+        duration = finish - self.round_finish_ms[-1]
+        self.round_finish_ms.append(finish)
+        return duration

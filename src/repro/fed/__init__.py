@@ -1,3 +1,9 @@
-from .gossip import GossipPlan, gossip_einsum, gossip_shard_map, collective_bytes_per_round
+from .gossip import (
+    GossipPlan,
+    PlanSlot,
+    collective_bytes_per_round,
+    gossip_einsum,
+    gossip_shard_map,
+)
 from .dpasgd import DPASGDConfig, make_train_step, init_state, local_sgd_steps
 from .topology_runtime import plan_from_overlay

@@ -67,6 +67,48 @@ class GossipPlan:
         return sum(1 for (_, p) in self.terms if p != ident)
 
 
+class PlanSlot:
+    """Hot-swap hook for the active gossip plan.
+
+    A ``GossipPlan`` is baked into the jitted train step (its Birkhoff
+    terms decide which ``ppermute`` calls are traced), so it cannot change
+    under a compiled function's feet.  The slot makes the swap explicit:
+    the training loop builds its step from ``slot.plan`` and re-lowers
+    whenever ``slot.version`` moves; an online controller (see
+    :mod:`repro.dynamics.controller`) calls :meth:`swap` between rounds.
+    ``on_swap`` callbacks fire synchronously inside :meth:`swap` — e.g. to
+    drop a cached compiled step.  ``history`` keeps an audit trail of
+    (version, label) swaps.
+    """
+
+    def __init__(self, plan: GossipPlan):
+        self._plan = plan
+        self.version = 0
+        self.history: List[Tuple[int, str]] = [(0, "init")]
+        self._callbacks: List[Any] = []
+
+    @property
+    def plan(self) -> GossipPlan:
+        return self._plan
+
+    def on_swap(self, callback) -> Any:
+        """Register ``callback(plan, version)``; returns it (decorator use)."""
+        self._callbacks.append(callback)
+        return callback
+
+    def swap(self, plan: GossipPlan, label: str = "") -> int:
+        if plan.n_silos != self._plan.n_silos:
+            raise ValueError(
+                f"plan spans {plan.n_silos} silos, slot holds {self._plan.n_silos}"
+            )
+        self._plan = plan
+        self.version += 1
+        self.history.append((self.version, label))
+        for cb in self._callbacks:
+            cb(plan, self.version)
+        return self.version
+
+
 def gossip_einsum(params: Any, A: jax.Array) -> Any:
     """Reference: dense mixing over the leading silo dimension."""
     return jax.tree_util.tree_map(

@@ -6,6 +6,16 @@
 On this CPU container use ``--reduced`` (tiny same-family variant) and a
 virtual device mesh (set automatically from --silos).  On TPU the same
 entry point drives the production mesh.
+
+``--dynamic`` attaches the online topology controller: the WAN between
+the silos is simulated from a real underlay (``--underlay``) through a
+seeded event scenario (``--scenario``), each training step advances the
+simulated network clock by one communication round, and when the
+controller detects throughput regression it re-designs the overlay and
+hot-swaps the gossip plan — the train step is re-lowered on the new plan:
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --dynamic --underlay gaia --scenario linkfail --steps 60
 """
 
 from __future__ import annotations
@@ -22,7 +32,8 @@ def main() -> int:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--silos", type=int, default=4)
     ap.add_argument("--topology", default="ring",
-                    choices=["ring", "star", "chain", "none"])
+                    choices=["ring", "star", "chain", "none", "mst",
+                             "ring_2opt", "delta_mbst"])
     ap.add_argument("--gossip-impl", default="ppermute",
                     choices=["ppermute", "einsum", "pallas", "none"])
     ap.add_argument("--local-steps", type=int, default=2)
@@ -31,7 +42,23 @@ def main() -> int:
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="simulate a time-varying WAN and run the online "
+                         "topology controller (silo count follows the underlay)")
+    ap.add_argument("--underlay", default="gaia")
+    ap.add_argument("--workload", default="inaturalist")
+    ap.add_argument("--scenario", default="linkfail",
+                    choices=["linkfail", "random", "static"])
+    ap.add_argument("--scenario-seed", type=int, default=0)
     args = ap.parse_args()
+
+    underlay = None
+    if args.dynamic:
+        # numpy-only imports: safe before the XLA device-count env is set
+        from repro.core import make_underlay
+
+        underlay = make_underlay(args.underlay)
+        args.silos = underlay.num_silos
 
     if "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (
@@ -45,7 +72,7 @@ def main() -> int:
     from repro.data import SyntheticLMStream, FederatedBatcher
     from repro.fed import DPASGDConfig, init_state, make_train_step
     from repro.launch.mesh import compat_make_mesh, mesh_context
-    from repro.fed.topology_runtime import plan_for_n_silos
+    from repro.fed.topology_runtime import plan_for_n_silos, plan_from_overlay
     from repro.optim import momentum
 
     cfg = get_config(args.arch)
@@ -57,10 +84,64 @@ def main() -> int:
     n = args.silos
     mesh = compat_make_mesh((n,), ("data",))
     opt = momentum(args.lr, 0.9)
-    plan = plan_for_n_silos(args.topology, n) if n > 1 else None
     fed = DPASGDConfig(local_steps=args.local_steps,
                        gossip_impl=args.gossip_impl if n > 1 else "none",
                        silo_axis="data")
+
+    timeline = controller = slot = None
+    if args.dynamic:
+        from repro.core import (
+            OVERLAY_KINDS, TrainingParams, WORKLOADS, design_overlay,
+        )
+        from repro.dynamics import (
+            ControllerConfig, DynamicTimeline, OnlineTopologyController,
+            active_subgraph, link_failure_scenario, random_scenario,
+            static_scenario,
+        )
+        from repro.fed.gossip import PlanSlot
+
+        M, Tc = WORKLOADS[args.workload]
+        tp = TrainingParams(model_size_mbits=M, local_steps=args.local_steps)
+        gc0 = underlay.connectivity_graph(comp_time_ms=Tc)
+        kind = args.topology if args.topology in OVERLAY_KINDS else "ring"
+        overlay = design_overlay(kind, gc0, tp)
+        print(f"dynamic: {args.underlay} N={n}, {kind} overlay, "
+              f"predicted tau={overlay.cycle_time_ms:.1f} ms")
+        horizon = overlay.cycle_time_ms * max(args.steps, 1)
+        if args.scenario == "linkfail":
+            scenario = link_failure_scenario(
+                underlay, Tc, t_fail_ms=horizon / 3,
+                overlay_edges=overlay.edges, horizon_ms=horizon)
+        elif args.scenario == "random":
+            # churn disabled: the mesh axis (and the silo-stacked state)
+            # is sized once at launch and cannot shrink mid-run
+            scenario = random_scenario(
+                underlay, Tc, seed=args.scenario_seed, horizon_ms=horizon,
+                p_churn=0.0)
+        else:
+            scenario = static_scenario(underlay, Tc, horizon_ms=horizon)
+        timeline = DynamicTimeline(scenario, tp)
+        timeline.set_overlay(overlay.edges)
+        slot = PlanSlot(plan_from_overlay(overlay, n))
+        controller = OnlineTopologyController(
+            gc0, tp, overlay,
+            config=ControllerConfig(seed=args.scenario_seed),
+            connectivity_provider=lambda: active_subgraph(
+                timeline.current_epoch().gc, timeline.current_epoch().active),
+            plan_slot=slot,
+        )
+        plan = slot.plan
+    else:
+        # Without --dynamic there are no network measurements to design
+        # from; the measurement-based kinds fall back to their homogeneous
+        # mesh equivalents.
+        kind = {"delta_mbst": "mst", "ring_2opt": "ring"}.get(
+            args.topology, args.topology)
+        if kind != args.topology:
+            print(f"note: --topology {args.topology} needs --dynamic "
+                  f"(network measurements); using homogeneous '{kind}' plan")
+        plan = plan_for_n_silos(kind, n) if n > 1 else None
+
     step_fn = make_train_step(cfg, fed, opt, plan, mesh)
     state = init_state(cfg, opt, jax.random.PRNGKey(0))
     if n > 1:
@@ -74,14 +155,38 @@ def main() -> int:
     stream = SyntheticLMStream(cfg.vocab_size, args.seq_len, n_silos=max(n, 1))
     batcher = FederatedBatcher(stream, args.local_steps, args.batch_per_silo)
     jstep = jax.jit(step_fn)
+    built_version = slot.version if slot is not None else 0
     t0 = time.time()
     with mesh_context(mesh):
         for i in range(args.steps):
             b = {k: jnp.asarray(v) for k, v in batcher.batch(i).items()}
             state, metrics = jstep(state, b)
+            if args.dynamic:
+                # one train step == one communication round of simulated WAN
+                duration = timeline.step()
+                redesign = controller.observe_round(duration)
+                if redesign is not None:
+                    timeline.set_overlay(redesign.overlay.edges)
+                    print(f"step {i:4d} [t={timeline.now_ms/1e3:7.1f}s sim] "
+                          f"controller re-design: {redesign.overlay.name} "
+                          f"tau {redesign.measured_ms:.1f} -> "
+                          f"{redesign.predicted_tau_ms:.1f} ms "
+                          f"({redesign.n_candidates} candidates in "
+                          f"{redesign.elapsed_s*1e3:.0f} ms), bottleneck "
+                          f"{redesign.bottleneck}", flush=True)
+                if slot.version != built_version:
+                    # hot-swap: re-lower the train step on the new plan
+                    jstep = jax.jit(make_train_step(cfg, fed, opt, slot.plan,
+                                                    mesh))
+                    built_version = slot.version
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                       f"({time.time()-t0:.1f}s)", flush=True)
+    if args.dynamic and controller is not None:
+        print(f"dynamic summary: {timeline.rounds_done} rounds in "
+              f"{timeline.now_ms/1e3:.1f}s simulated, "
+              f"{len(controller.redesigns)} re-design(s), final overlay "
+              f"{controller.overlay.name} (tau {controller.predicted_tau_ms:.1f} ms)")
     if args.checkpoint:
         from repro.checkpoint import save_checkpoint
 

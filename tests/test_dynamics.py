@@ -1,0 +1,392 @@
+"""Dynamics subsystem: scenario model, event-driven simulator, and the
+online re-design controller (plus the vectorized critical circuit the
+controller explains bottlenecks with).
+
+Key identities under test:
+
+* a no-event scenario reproduces ``timing_recursion_dense`` exactly
+  (bit-for-bit, not approximately);
+* inside each static segment of an eventful scenario, the realized
+  round-time slope matches ``cycle_time_dense`` of that segment's delay
+  matrix (the Thm 3.23 identity, per epoch);
+* on a seeded Gaia core-link failure the controller beats the
+  non-adaptive designed overlay in rounds-by-deadline, and one re-design
+  step over >= 256 candidates at N=22 completes in under a second.
+"""
+
+import math
+import random
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.delays import TrainingParams, overlay_delay_matrix
+from repro.core.maxplus import DelayDigraph, critical_circuit, critical_circuit_legacy
+from repro.core.maxplus_vec import (
+    critical_circuit_dense,
+    cycle_time_dense,
+    graph_to_matrix,
+    timing_recursion_dense,
+    timing_recursion_piecewise,
+)
+from repro.dynamics import (
+    ComputeStraggler,
+    ControllerConfig,
+    DynamicTimeline,
+    LinkDegraded,
+    LinkFailed,
+    OnlineTopologyController,
+    Scenario,
+    SiloJoin,
+    SiloLeave,
+    active_subgraph,
+    design_best_overlay,
+    link_failure_scenario,
+    random_scenario,
+    simulate_dynamic,
+    simulate_scenarios_batched,
+    static_scenario,
+)
+from repro.fed.gossip import PlanSlot
+
+
+def gaia_setup(workload="inaturalist", s=1):
+    M, Tc = C.WORKLOADS[workload]
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=s)
+    return u, gc, tp, Tc
+
+
+# ---------------------------------------------------------------------------
+# Scenario model
+
+
+def test_no_event_scenario_is_single_segment_of_the_measured_network():
+    u, gc, tp, Tc = gaia_setup()
+    segs = static_scenario(u, Tc).segments()
+    assert len(segs) == 1 and segs[0].t_end_ms == math.inf
+    for e, lat in gc.latency_ms.items():
+        assert segs[0].gc.latency_ms[e] == pytest.approx(lat)
+        assert segs[0].gc.available_bw_gbps[e] == pytest.approx(
+            gc.available_bw_gbps[e]
+        )
+
+
+def test_events_fold_into_piecewise_epochs():
+    u, gc, tp, Tc = gaia_setup()
+    link = u.core_edges[0]
+    sc = Scenario(
+        name="t",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(
+            LinkDegraded(t_ms=1000.0, link=link, factor=0.1),
+            ComputeStraggler(t_ms=1000.0, silo=2, factor=5.0),
+            LinkFailed(t_ms=3000.0, link=link),
+            SiloLeave(t_ms=5000.0, silo=4),
+            SiloJoin(t_ms=7000.0, silo=4),
+        ),
+        horizon_ms=10_000.0,
+    )
+    segs = sc.segments()
+    # simultaneous events merge: boundaries at 1000, 3000, 5000, 7000
+    assert [s.t_start_ms for s in segs] == [0.0, 1000.0, 3000.0, 5000.0, 7000.0]
+    i, j = link
+    # degradation scales the direct pair's available bandwidth
+    assert segs[1].gc.available_bw_gbps[(i, j)] == pytest.approx(
+        0.1 * segs[0].gc.available_bw_gbps[(i, j)]
+    )
+    # straggler scales computation
+    assert segs[1].gc.silo_params[2].comp_time_ms == pytest.approx(5.0 * Tc)
+    # failure re-routes: latency strictly grows, pair still reachable
+    assert segs[2].gc.latency_ms[(i, j)] > segs[0].gc.latency_ms[(i, j)]
+    # churn shrinks and restores the active set
+    assert 4 not in segs[3].active and 4 in segs[4].active
+    assert all((a, 4) not in segs[3].gc.latency_ms for a in segs[3].active)
+    # inactive silo contributes no self-loop circuit
+    assert segs[3].gc.silo_params[4].comp_time_ms == 0.0
+
+
+def test_random_scenario_is_seed_deterministic():
+    u, gc, tp, Tc = gaia_setup()
+    a = random_scenario(u, Tc, seed=11, n_events=8)
+    b = random_scenario(u, Tc, seed=11, n_events=8)
+    assert a.events == b.events
+    c = random_scenario(u, Tc, seed=12, n_events=8)
+    assert a.events != c.events
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulator
+
+
+def test_no_event_scenario_reproduces_static_recursion_exactly():
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    run = simulate_dynamic(static_scenario(u, Tc), tp, ring.edges, num_rounds=60)
+    W = overlay_delay_matrix(gc, tp, ring.edges)
+    assert np.array_equal(run.times, timing_recursion_dense(W, 60))
+
+
+def test_per_segment_empirical_cycle_time_matches_karp():
+    """On static sub-intervals the realized slope equals cycle_time_dense
+    of that segment's delay matrix (per-epoch Thm 3.23)."""
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = link_failure_scenario(
+        u, Tc, t_fail_ms=60 * ring.cycle_time_ms, overlay_edges=ring.edges
+    )
+    run = simulate_dynamic(sc, tp, ring.edges, num_rounds=200)
+    assert run.predicted_tau_ms.shape == run.empirical_tau_ms.shape == (2,)
+    # both segments hold for >= 50 rounds: slopes must have converged
+    for emp, pred in zip(run.empirical_tau_ms, run.predicted_tau_ms):
+        assert emp == pytest.approx(pred, rel=0.02)
+    assert run.predicted_tau_ms[1] > run.predicted_tau_ms[0]
+
+
+def test_piecewise_recursion_single_epoch_is_dense_recursion():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        n = int(rng.integers(2, 9))
+        W = np.where(
+            rng.random((n, n)) < 0.5, rng.uniform(0.1, 30.0, (n, n)), -np.inf
+        )
+        a = timing_recursion_dense(W, 30)
+        b = timing_recursion_piecewise(W[None], np.zeros(1), 30)
+        assert np.array_equal(a, b)
+
+
+def test_batched_scenarios_match_per_scenario_runs():
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    horizon = 100 * ring.cycle_time_ms
+    scenarios = [
+        random_scenario(u, Tc, seed=s, horizon_ms=horizon) for s in range(6)
+    ]
+    batched = simulate_scenarios_batched(scenarios, tp, ring.edges, 80)
+    for b, sc in enumerate(scenarios):
+        solo = simulate_dynamic(sc, tp, ring.edges, num_rounds=80)
+        np.testing.assert_array_equal(batched[b], solo.times)
+
+
+def test_straggler_slows_rounds_then_recovers():
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    t1, t2 = 30 * ring.cycle_time_ms, 60 * ring.cycle_time_ms
+    sc = Scenario(
+        name="straggle",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(
+            ComputeStraggler(t_ms=t1, silo=0, factor=40.0),
+            ComputeStraggler(t_ms=t2, silo=0, factor=1.0),
+        ),
+        horizon_ms=100 * ring.cycle_time_ms,
+    )
+    run = simulate_dynamic(sc, tp, ring.edges, num_rounds=150)
+    assert run.predicted_tau_ms[1] > run.predicted_tau_ms[0]
+    assert run.predicted_tau_ms[2] == pytest.approx(run.predicted_tau_ms[0])
+
+
+# ---------------------------------------------------------------------------
+# Online controller (acceptance)
+
+
+def adaptive_vs_static(scenario, tp, gc0, overlay, deadline_ms, **cfg_kw):
+    timeline = DynamicTimeline(scenario, tp)
+    timeline.set_overlay(overlay.edges)
+    slot = PlanSlot(
+        OnlineTopologyController(gc0, tp, overlay).plan
+    )
+    controller = OnlineTopologyController(
+        gc0,
+        tp,
+        overlay,
+        config=ControllerConfig(**cfg_kw),
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+        plan_slot=slot,
+    )
+    while timeline.now_ms < deadline_ms:
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_overlay(redesign.overlay.edges)
+    adaptive_rounds = sum(
+        1 for f in timeline.round_finish_ms[1:] if f <= deadline_ms
+    )
+    return adaptive_rounds, controller, slot
+
+
+def test_controller_beats_nonadaptive_on_seeded_gaia_link_failure():
+    """Acceptance: seeded Gaia link-failure scenario — the controller's
+    realized rounds-by-deadline beat the non-adaptive designed overlay."""
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    deadline = 400 * ring.cycle_time_ms
+    sc = link_failure_scenario(
+        u, Tc, t_fail_ms=deadline / 3, overlay_edges=ring.edges,
+        horizon_ms=deadline,
+    )
+    adaptive_rounds, controller, slot = adaptive_vs_static(
+        sc, tp, gc, ring, deadline, seed=0
+    )
+    base = simulate_dynamic(sc, tp, ring.edges, num_rounds=500)
+    base_rounds = base.rounds_completed_by(deadline)
+    assert len(controller.redesigns) >= 1
+    assert adaptive_rounds > base_rounds
+    # the hot-swap hook actually fired (init + >= 1 re-design)
+    assert slot.version >= 2
+    # the re-design is explained by a critical circuit of the new overlay
+    rd = controller.redesigns[0]
+    assert len(rd.bottleneck) >= 2 and rd.bottleneck[0] == rd.bottleneck[-1]
+
+
+def test_controller_detects_silo_churn_via_fast_rounds():
+    """A departed silo breaks the ring: rounds get *faster* while mixing
+    silently stops.  The two-sided detector must fire and re-design over
+    the surviving silos."""
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = Scenario(
+        name="churn",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(SiloLeave(t_ms=30 * ring.cycle_time_ms, silo=5),),
+        horizon_ms=200 * ring.cycle_time_ms,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+    )
+    for _ in range(120):
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_overlay(redesign.overlay.edges)
+    assert len(controller.redesigns) >= 1
+    survivors = {v for e in controller.overlay.edges for v in e}
+    assert 5 not in survivors and len(survivors) == 10
+
+
+def test_churn_redesign_with_plan_slot_does_not_crash():
+    """The slot's mesh axis is sized at launch: a re-design over fewer
+    silos must leave the old plan running with an audit note, not raise
+    from inside observe_round."""
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = Scenario(
+        name="churn",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(SiloLeave(t_ms=30 * ring.cycle_time_ms, silo=5),),
+        horizon_ms=200 * ring.cycle_time_ms,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    from repro.fed.topology_runtime import plan_from_overlay
+
+    slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+        plan_slot=slot,
+    )
+    version_before = slot.version
+    for _ in range(120):
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_overlay(redesign.overlay.edges)
+    assert len(controller.redesigns) >= 1
+    assert slot.version == version_before  # swap skipped, not applied
+    assert any("NOT swapped" in note for _, note in slot.history)
+
+
+def test_controller_is_quiet_on_a_healthy_network():
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = static_scenario(u, Tc)
+    adaptive_rounds, controller, _ = adaptive_vs_static(
+        sc, tp, gc, ring, 200 * ring.cycle_time_ms
+    )
+    assert controller.redesigns == []
+
+
+def test_redesign_latency_256_candidates_n22_under_1s():
+    """Acceptance: one controller re-design step over >= 256 candidate
+    overlays at N=22 (AWS North America) in under a second."""
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay("aws_na")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=1)
+    assert u.num_silos == 22
+    t0 = time.perf_counter()
+    best, scored = design_best_overlay(gc, tp, n_candidates=256)
+    elapsed = time.perf_counter() - t0
+    assert scored >= 256
+    assert elapsed < 1.0, f"re-design took {elapsed:.2f}s"
+    # sanity: the search result is a real overlay on this network
+    assert best.cycle_time_ms > 0 and len(best.edges) >= u.num_silos
+
+
+def test_plan_slot_swap_contract():
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    mst = C.design_overlay("mst", gc, tp)
+    from repro.fed.topology_runtime import plan_from_overlay
+
+    slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    seen = []
+    slot.on_swap(lambda plan, version: seen.append(version))
+    v = slot.swap(plan_from_overlay(mst, gc.num_silos), label="mst")
+    assert v == 1 and slot.version == 1 and seen == [1]
+    assert slot.history[-1] == (1, "mst")
+    from repro.fed.gossip import GossipPlan
+
+    with pytest.raises(ValueError):  # silo-count mismatch is rejected
+        slot.swap(GossipPlan.from_matrix(np.eye(3)))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized critical circuit (controller's bottleneck explanation)
+
+
+def random_strong_digraph(rng, n):
+    delays = {(i, (i + 1) % n): rng.uniform(0.5, 20.0) for i in range(n)}
+    for i in range(n):
+        delays[(i, i)] = rng.uniform(0.0, 5.0)
+        j = rng.randrange(n)
+        if j != i:
+            delays[(i, j)] = rng.uniform(0.5, 20.0)
+    return DelayDigraph(tuple(range(n)), delays)
+
+
+def test_critical_circuit_dense_matches_legacy_tau_and_attains_it():
+    for seed in range(60):
+        rng = random.Random(seed)
+        g = random_strong_digraph(rng, rng.randint(2, 12))
+        tau_l, circ_l = critical_circuit_legacy(g)
+        tau, circ = critical_circuit(g)
+        assert tau == pytest.approx(tau_l, rel=1e-9)
+        assert len(circ) >= 2 and circ[0] == circ[-1]
+        hops = list(zip(circ[:-1], circ[1:]))
+        mean = sum(g.delays[e] for e in hops) / len(hops)
+        assert mean == pytest.approx(tau, rel=1e-6, abs=1e-6)
+
+
+def test_critical_circuit_dense_acyclic_and_self_loop():
+    dag = DelayDigraph((0, 1), {(0, 1): 2.0})
+    W, _ = graph_to_matrix(dag)
+    assert critical_circuit_dense(W) == (-math.inf, [])
+    loop = DelayDigraph((0,), {(0, 0): 7.0})
+    W, _ = graph_to_matrix(loop)
+    tau, circ = critical_circuit_dense(W)
+    assert tau == pytest.approx(7.0) and circ == [0, 0]
