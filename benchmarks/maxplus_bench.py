@@ -10,13 +10,18 @@ For each cell we time
                 (float64: bit-compatible with the legacy floats);
 * ``np32``    — same call with ``dtype=np.float32`` (search-grade scoring);
 * ``jax``     — the jitted ``batched_cycle_time_jax`` (f32, compile
-                excluded).
+                excluded);
+* ``sp32``    — the edge-list engine (``batched_cycle_time_sparse``,
+                f32) on the same graphs (ring + ~4N chords -> E ~ 6N).
+                O(B*N*E) instead of O(B*N^3): loses to dense sweeps at
+                small N, wins past N~256 — the full sparse-vs-dense
+                scaling study lives in ``benchmarks/sparse_search_bench.py``.
 
 Legacy timings at large (N, B) are measured on a subsample of the batch
 and scaled linearly (marked ``~`` in the table) — the whole point is that
 the legacy path is too slow to run 1024 x N=256 candidates.
 
-CSV: maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,speedup_best
+CSV: maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,sp32_ms,speedup_best
 Acceptance target: >= 10x speedup at N=64, B=1024.
 """
 
@@ -28,6 +33,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.maxplus import DelayDigraph, max_cycle_mean_legacy
+from repro.core.maxplus_sparse import batched_cycle_time_sparse, dense_to_edge_batch
 from repro.core.maxplus_vec import batched_cycle_time, batched_cycle_time_jax
 
 # Cap on how many graphs the legacy path actually evaluates per cell.
@@ -79,7 +85,7 @@ def run(assert_speedup: bool = True) -> None:
         have_jax = False
 
     print("# max-plus engine throughput (ms per full candidate batch)")
-    print("maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,speedup_best")
+    print("maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,sp32_ms,speedup_best")
     checked = False
     for n in (16, 64, 256):
         for b in (1, 128, 1024):
@@ -111,10 +117,15 @@ def run(assert_speedup: bool = True) -> None:
             else:
                 jax_ms, jax_str = float("inf"), "n/a"
 
-            best = legacy_ms / min(np64_ms, np32_ms, jax_ms)
+            eb32 = dense_to_edge_batch(W32)
+            sp32_ms = _time(
+                lambda: batched_cycle_time_sparse(eb32), repeats=2
+            )
+
+            best = legacy_ms / min(np64_ms, np32_ms, jax_ms, sp32_ms)
             print(
                 f"maxplus,{n},{b},{approx}{legacy_ms:.2f},{np64_ms:.2f},"
-                f"{np32_ms:.2f},{jax_str},{best:.1f}"
+                f"{np32_ms:.2f},{jax_str},{sp32_ms:.2f},{best:.1f}"
             )
             if n == 64 and b == 1024:
                 checked = True

@@ -1,0 +1,217 @@
+"""Sparse engine + jitted topology search: the large-N scaling story.
+
+Two questions gate the ROADMAP's past-the-dense-wall direction:
+
+* **scoring** — batched cycle-time evaluation of *sparse* overlays
+  (degree <= 8 circulant-style digraphs: ring + 6 random chord offsets
+  + self loops, E ~ 8N) at N in {64, 256, 1024}.  The dense engine pays
+  O(B*N^3) regardless of sparsity; the edge-list engine pays O(B*N*E).
+  Dense timings at N=1024 are measured on a batch subsample and scaled
+  linearly (marked ``~``).  Acceptance: some sparse path beats the dense
+  engine at N=1024.
+* **search** — :func:`repro.core.topologies.search_overlays_jit` (the
+  device-side rewire hill climb) against the controller's 256-candidate
+  random-ring search on the Gaia underlay at *equal wall-clock budget*:
+  the ring search is re-run with however many candidates fit in the
+  rewire search's (warm, compile-excluded) wall time.  Acceptance: the
+  rewire search's overlay cycle time is <= the ring search's.
+
+CSV rows: ``sparse_search,score,N,B,E,dense_ms,sp64_ms,sp32_ms,spjax_ms``
+and ``sparse_search,gaia,<metric>,<value>``.  ``run()`` returns the
+metrics dict that ``benchmarks.run --json`` serializes
+(BENCH_sparse_search.json).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import numpy as np
+
+import repro.core as C
+from repro.core.maxplus_sparse import (
+    EdgeBatch,
+    batched_cycle_time_sparse,
+    batched_cycle_time_sparse_jax,
+    edge_batch_to_dense,
+)
+from repro.core.maxplus_vec import batched_cycle_time
+from repro.core.topologies import search_overlays_jit
+from repro.dynamics import search_ring_candidates
+
+# (batch scored by the sparse paths, batch actually timed on the dense path)
+_SCORING_GRID = {64: (256, 256), 256: (32, 8), 1024: (8, 2)}
+_CHORDS = 6  # extra out-edges per vertex -> degree <= 8 with the ring arc
+
+
+def random_sparse_overlays(rng: np.random.Generator, n: int, b: int) -> EdgeBatch:
+    """B strongly-connected degree-<=8 delay digraphs as an edge batch.
+
+    Ring over a random permutation + ``_CHORDS`` random circulant chord
+    offsets per graph (out-degree = in-degree = 1 + ``_CHORDS``) + self
+    loops — the sparse-overlay family the search explores.
+    """
+    E = n * (2 + _CHORDS)
+    src = np.empty((b, E), dtype=np.int32)
+    dst = np.empty((b, E), dtype=np.int32)
+    w = np.empty((b, E), dtype=np.float64)
+    idx = np.arange(n, dtype=np.int32)
+    for k in range(b):
+        perm = rng.permutation(n).astype(np.int32)
+        cols = [(perm, np.roll(perm, -1))]  # ring
+        offsets = rng.choice(np.arange(2, n - 1), size=_CHORDS, replace=False)
+        for off in offsets:
+            cols.append((idx, (idx + off) % n))
+        cols.append((idx, idx))  # self loops
+        src[k] = np.concatenate([s for (s, _) in cols])
+        dst[k] = np.concatenate([d for (_, d) in cols])
+        w[k] = rng.uniform(0.5, 20.0, E)
+        w[k, -n:] = rng.uniform(0.0, 5.0, n)  # computation self-delays
+    return EdgeBatch(src, dst, w, n)
+
+
+def _time(fn, repeats: int = 2) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def bench_scoring() -> Dict[str, Dict[str, float]]:
+    try:
+        import jax
+
+        jit_sparse = jax.jit(batched_cycle_time_sparse_jax, static_argnums=3)
+        have_jax = True
+    except Exception:
+        have_jax = False
+
+    print("# batched cycle-time scoring of sparse (degree<=8) overlays")
+    print("sparse_search,score,N,B,E,dense_ms,sp64_ms,sp32_ms,spjax_ms")
+    out: Dict[str, Dict[str, float]] = {}
+    for n, (b, b_dense) in _SCORING_GRID.items():
+        rng = np.random.default_rng(n)
+        eb = random_sparse_overlays(rng, n, b)
+        W = edge_batch_to_dense(eb).astype(np.float32)
+
+        dense_sub_ms = _time(
+            lambda: batched_cycle_time(W[:b_dense], dtype=np.float32),
+            repeats=2 if n < 1024 else 1,
+        )
+        dense_ms = dense_sub_ms * (b / b_dense)
+        approx = "~" if b_dense < b else ""
+
+        sp64_ms = _time(lambda: batched_cycle_time_sparse(eb))
+        eb32 = EdgeBatch(eb.src, eb.dst, eb.w.astype(np.float32), n)
+        sp32_ms = _time(lambda: batched_cycle_time_sparse(eb32))
+        if have_jax:
+            w32 = eb32.w
+            jit_sparse(eb.src, eb.dst, w32, n).block_until_ready()  # compile
+            spjax_ms = _time(
+                lambda: jit_sparse(eb.src, eb.dst, w32, n).block_until_ready()
+            )
+            jax_str = f"{spjax_ms:.2f}"
+        else:
+            spjax_ms, jax_str = float("inf"), "n/a"
+
+        # correctness spot check: sparse f64 == dense f64 on a subsample
+        ref = batched_cycle_time(edge_batch_to_dense(eb)[:2])
+        got = batched_cycle_time_sparse(
+            EdgeBatch(eb.src[:2], eb.dst[:2], eb.w[:2], n)
+        )
+        np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+        print(
+            f"sparse_search,score,{n},{b},{eb.max_edges},{approx}{dense_ms:.2f},"
+            f"{sp64_ms:.2f},{sp32_ms:.2f},{jax_str}"
+        )
+        best_sparse = min(sp64_ms, sp32_ms, spjax_ms)
+        out[f"N{n}"] = {
+            "batch": b,
+            "edges": eb.max_edges,
+            "dense_f32_ms": dense_ms,
+            "sparse_f64_ms": sp64_ms,
+            "sparse_f32_ms": sp32_ms,
+            "sparse_jax_ms": spjax_ms if math.isfinite(spjax_ms) else None,
+            "speedup_vs_dense": dense_ms / best_sparse,
+        }
+        if n == 1024:
+            print(
+                f"# acceptance N=1024: sparse {best_sparse:.1f} ms vs dense "
+                f"{dense_ms:.1f} ms ({dense_ms / best_sparse:.1f}x)"
+            )
+            assert best_sparse < dense_ms, (
+                f"sparse path ({best_sparse:.1f} ms) does not beat dense "
+                f"({dense_ms:.1f} ms) at N=1024"
+            )
+    return out
+
+
+def bench_gaia_search(
+    n_restarts: int = 16, n_steps: int = 96
+) -> Dict[str, float]:
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+
+    # warm up (jit compile + numpy allocator), then time the real run
+    search_overlays_jit(gc, tp, n_restarts=n_restarts, n_steps=n_steps, seed=0)
+    t0 = time.perf_counter()
+    ov = search_overlays_jit(
+        gc, tp, n_restarts=n_restarts, n_steps=n_steps, seed=1
+    )
+    search_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    ring256 = search_ring_candidates(gc, tp, 256, rng)
+    ring256_s = time.perf_counter() - t0
+    # equal wall-clock budget: as many ring candidates as fit in search_s
+    n_equal = max(256, int(256 * search_s / max(ring256_s, 1e-9)))
+    t0 = time.perf_counter()
+    ring_eq = search_ring_candidates(gc, tp, n_equal, np.random.default_rng(0))
+    ring_eq_s = time.perf_counter() - t0
+
+    print("# gaia: jitted rewire search vs random-ring search (equal budget)")
+    print(f"sparse_search,gaia,rewire_ms,{search_s*1e3:.1f},"
+          f"restarts={n_restarts} steps={n_steps}")
+    print(f"sparse_search,gaia,rewire_tau_ms,{ov.cycle_time_ms:.2f},")
+    print(f"sparse_search,gaia,ring256_tau_ms,{ring256.cycle_time_ms:.2f},"
+          f"{ring256_s*1e3:.1f}ms")
+    print(f"sparse_search,gaia,ring_equal_tau_ms,{ring_eq.cycle_time_ms:.2f},"
+          f"candidates={n_equal} in {ring_eq_s*1e3:.1f}ms")
+    assert ov.cycle_time_ms <= ring256.cycle_time_ms + 1e-9, (
+        f"rewire search tau {ov.cycle_time_ms:.2f} worse than 256-ring "
+        f"search {ring256.cycle_time_ms:.2f}"
+    )
+    assert ov.cycle_time_ms <= ring_eq.cycle_time_ms + 1e-9, (
+        f"rewire search tau {ov.cycle_time_ms:.2f} worse than equal-budget "
+        f"ring search {ring_eq.cycle_time_ms:.2f} ({n_equal} candidates)"
+    )
+    return {
+        "network": u.name,
+        "num_silos": u.num_silos,
+        "rewire_s": search_s,
+        "rewire_tau_ms": ov.cycle_time_ms,
+        "ring256_s": ring256_s,
+        "ring256_tau_ms": ring256.cycle_time_ms,
+        "ring_equal_candidates": n_equal,
+        "ring_equal_tau_ms": ring_eq.cycle_time_ms,
+    }
+
+
+def run() -> Dict[str, Dict]:
+    scoring = bench_scoring()
+    print()
+    gaia = bench_gaia_search()
+    print()
+    return {"scoring": scoring, "gaia_search": gaia}
+
+
+if __name__ == "__main__":
+    run()

@@ -13,4 +13,10 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
     echo "WARN: could not install requirements-dev.txt;" \
          "property tests will use the compat-shim sweeps" >&2
 fi
-python -m pytest -x -q "$@"
+# Docs gate first: the README quickstart must run as-is and docs/ must
+# not reference dead file paths (tests/test_readme_quickstart.py).
+echo "== docs gate =="
+python -m pytest -x -q tests/test_readme_quickstart.py
+echo "== tier-1 =="
+# --ignore: the docs gate already ran that file; don't run it twice
+python -m pytest -x -q --ignore=tests/test_readme_quickstart.py "$@"

@@ -1,5 +1,17 @@
 """Core contribution of the paper: max-plus throughput analysis and
-throughput-optimal topology design for cross-silo federated learning."""
+throughput-optimal topology design for cross-silo federated learning.
+
+Three generations of the max-plus machinery coexist, equivalence-tested
+against each other (see docs/architecture.md for the full map):
+
+* :mod:`repro.core.maxplus`        — node-labelled dict front end +
+  ``*_legacy`` pure-Python oracles;
+* :mod:`repro.core.maxplus_vec`    — dense batched ``[B, N, N]`` engine
+  (numpy f32/f64 + jittable JAX);
+* :mod:`repro.core.maxplus_sparse` — padded edge-list ``[B, E]`` engine
+  for large sparse overlays, powering the device-side
+  :func:`~repro.core.topologies.search_overlays_jit`.
+"""
 
 from .maxplus import (
     DelayDigraph,
@@ -30,6 +42,19 @@ from .maxplus_vec import (
     scc_labels,
     timing_recursion_dense,
     timing_recursion_piecewise,
+)
+from .maxplus_sparse import (
+    EdgeBatch,
+    batched_cycle_time_sparse,
+    batched_cycle_time_sparse_jax,
+    batched_is_strongly_connected_sparse,
+    batched_overlay_delay_edges,
+    batched_timing_recursion_sparse,
+    cycle_time_sparse,
+    dense_to_edge_batch,
+    edge_batch_to_dense,
+    reachable_from_sparse,
+    scc_labels_sparse,
 )
 from .delays import (
     ConnectivityGraph,
@@ -63,6 +88,7 @@ from .topologies import (
     christofides_tour,
     brute_force_mct,
     evaluate_overlay,
+    search_overlays_jit,
     OVERLAY_KINDS,
 )
 from .matcha import Matcha, matcha_from_connectivity, matcha_plus_from_underlay, greedy_edge_coloring

@@ -85,6 +85,9 @@ def birkhoff_decomposition(
 
 
 def reconstruct(terms: List[Tuple[float, np.ndarray]], n: int) -> np.ndarray:
+    """Rebuild the ``[n, n]`` doubly-stochastic matrix from Birkhoff
+    ``(coeff, perm)`` terms (inverse of :func:`birkhoff_decomposition`;
+    used by round-trip tests)."""
     A = np.zeros((n, n))
     for (c, perm) in terms:
         for r in range(n):

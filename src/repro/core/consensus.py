@@ -69,6 +69,8 @@ def metropolis_matrix(n: int, edges: Sequence[Tuple[int, int]]) -> np.ndarray:
 
 
 def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-9) -> bool:
+    """True iff ``A`` ([n, n]) is nonnegative with unit row and column
+    sums — the precondition for the Birkhoff decomposition."""
     return (
         bool((A >= -tol).all())
         and bool(np.allclose(A.sum(axis=0), 1.0, atol=1e-8))

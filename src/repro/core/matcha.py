@@ -106,6 +106,12 @@ class Matcha:
 
 
 def matcha_from_connectivity(gc: ConnectivityGraph, budget: float = 0.5) -> Matcha:
+    """MATCHA over the symmetric pairs of a connectivity graph.
+
+    Greedy-colors the undirected pair graph into matchings and allocates
+    activation probabilities so the expected number of active matchings
+    per round is ``budget * num_matchings``.  Returns a :class:`Matcha`
+    sampler of per-round overlays."""
     pairs: List[Pair] = []
     seen: Set[frozenset] = set()
     for (i, j) in gc.latency_ms:

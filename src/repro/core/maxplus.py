@@ -195,6 +195,8 @@ def strongly_connected_components(graph: DelayDigraph) -> List[List[Node]]:
 
 
 def is_strongly_connected(graph: DelayDigraph) -> bool:
+    """True iff every silo can reach every other over the overlay arcs
+    (self-loops ignored) — the precondition for a finite cycle time."""
     W, _ = _vec.graph_to_matrix(graph)
     return bool(_vec.batched_is_strongly_connected(W))
 

@@ -162,8 +162,22 @@ def _karp_chunk(W: np.ndarray) -> np.ndarray:
         # D_k[v] = max_u D_{k-1}[u] + W[u, v]  — one broadcast sweep.
         cur = np.max(cur[:, :, None] + W, axis=1)
         D[k] = cur
+    return karp_from_levels(D)
+
+
+def karp_from_levels(D: np.ndarray) -> np.ndarray:
+    """Karp's formula from a precomputed multi-source DP table.
+
+    ``D`` is ``[N+1, B, N]`` with ``D[k, b, v]`` the max weight of a walk
+    of exactly k arcs ending at v in graph b (``D[0] == 0``).  Returns the
+    ``[B]`` max cycle means.  Shared by the dense sweep above and the
+    edge-list DP of :mod:`repro.core.maxplus_sparse` — the engines differ
+    only in how they produce the levels.
+    """
+    Np1, B, N = D.shape
+    assert Np1 == N + 1, f"expected [N+1, B, N] levels, got {D.shape}"
     Dn = D[N]  # [B, N]
-    denom = (N - np.arange(N)).astype(W.dtype)  # [N]
+    denom = (N - np.arange(N)).astype(D.dtype)  # [N]
     with np.errstate(invalid="ignore"):
         ratios = (Dn[None, :, :] - D[:N]) / denom[:, None, None]
     # D_k = -inf, D_N finite  -> ratio +inf (never the min): already so.

@@ -84,6 +84,10 @@ def predicted_cycle_time(
     tp: TrainingParams,
     overlay_edges: Sequence[Tuple[Node, Node]],
 ) -> float:
+    """Cycle time of an overlay straight from its measured inputs: build
+    the Eq. 3 delay matrix and take the max cycle mean (Eq. 5).  The
+    scalar the designers minimize and the simulator's slope converges
+    to."""
     return cycle_time_dense(overlay_delay_matrix(gc, tp, overlay_edges))
 
 

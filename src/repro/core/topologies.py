@@ -20,6 +20,12 @@ Implements every overlay of Table 1 / Table 3:
                             certify optimality/approximation claims on
                             small instances).
 
+Beyond the paper, ``search_overlays_jit`` runs a batched rewire hill
+climb *on device*: candidates are generated as local arc edits of an
+incumbent overlay and scored by the sparse jitted max-plus engine
+(:mod:`repro.core.maxplus_sparse`) inside one ``lax.fori_loop`` — the
+search path that scales past the dense engine's N~1k wall.
+
 An *overlay* is returned as a list of **directed** edges; undirected
 topologies contain both directions of every link.
 """
@@ -45,6 +51,11 @@ from .maxplus_vec import (
     batched_cycle_time,
     batched_is_strongly_connected,
     cycle_time_dense,
+)
+from .maxplus_sparse import (
+    batched_cycle_time_sparse,
+    batched_is_strongly_connected_sparse,
+    batched_overlay_delay_edges,
 )
 
 Node = Hashable
@@ -73,6 +84,10 @@ class Overlay:
 def evaluate_overlay(
     gc: ConnectivityGraph, tp: TrainingParams, edges: Sequence[Edge], name: str = "custom"
 ) -> Overlay:
+    """Price a directed edge list with Eq. 3 and return it as an
+    :class:`Overlay` with its exact (f64 dense-engine) cycle time.
+    Raises ``ValueError`` if the edges do not form a strongly-connected
+    digraph over ``gc.silos``."""
     W = overlay_delay_matrix(gc, tp, edges)
     if not batched_is_strongly_connected(W):
         raise ValueError(f"overlay {name!r} is not strongly connected")
@@ -191,6 +206,9 @@ def mst_edges(
 
 
 def mst_overlay(gc: ConnectivityGraph, tp: TrainingParams) -> Overlay:
+    """MST on the symmetrized connectivity delays, both arc directions
+    kept — optimal among undirected overlays on edge-capacitated
+    networks (Prop. 3.1)."""
     tree = mst_edges(gc, lambda i, j: symmetrized_delay_ms(gc, tp, i, j))
     ov = evaluate_overlay(gc, tp, _bidir(tree), name="mst")
     return ov
@@ -509,6 +527,367 @@ def brute_force_mct(
 
 
 # ---------------------------------------------------------------------------
+# Device-resident topology search (sparse engine + jitted rewire hill climb)
+
+# Lazily-built jitted climb, cached per process; jax recompiles per
+# distinct (B, S, N, n_steps, delta_max) shape tuple and caches after.
+_REWIRE_JIT: Dict[str, object] = {}
+
+
+def _build_rewire_climb():
+    import jax
+    import jax.numpy as jnp
+
+    from .maxplus_sparse import batched_cycle_time_sparse_jax
+
+    INF = jnp.inf
+
+    def climb(lat, bw, allowed, comp, up, dn, model_mbits,
+              asrc, adst, aact, key, n_steps, delta_max):
+        """Batched hill climb over arc-slot states.
+
+        ``asrc/adst/aact`` are ``[B, S]`` arc slots per restart; each step
+        proposes one local move (endpoint swap / arc add / arc drop) per
+        restart, scores the proposal with the sparse jitted Karp, and
+        accepts improvements.  Entirely device-side: one XLA computation
+        for the whole search.
+        """
+        B, S = asrc.shape
+        n = lat.shape[0]
+        boff = jnp.arange(B, dtype=jnp.int32)[:, None] * n
+        rows = jnp.arange(B)
+        sl = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+        comp_sl = jnp.broadcast_to(comp, (B, n))
+        slot_ids = jnp.arange(S, dtype=jnp.int32)
+
+        def reach_all(take_idx, seg_src, present):
+            # frontier propagation from vertex 0 along present arcs
+            r0 = jnp.zeros((B, n), dtype=lat.dtype).at[:, 0].set(1.0)
+
+            def body(_, r):
+                vals = jnp.take_along_axis(r, take_idx, axis=1) * present
+                hop = jax.ops.segment_max(
+                    vals.ravel(), seg_src, num_segments=B * n
+                ).reshape(B, n)
+                return jnp.maximum(r, hop)
+
+            return jax.lax.fori_loop(0, max(n - 1, 0), body, r0)
+
+        def score(a_src, a_dst, a_act):
+            present = a_act & allowed[a_src, a_dst] & (a_src != a_dst)
+            pf = present.astype(lat.dtype)
+            seg_dst = (boff + a_dst).ravel()
+            seg_src = (boff + a_src).ravel()
+            out_deg = jax.ops.segment_sum(
+                pf.ravel(), seg_src, num_segments=B * n
+            ).reshape(B, n)
+            in_deg = jax.ops.segment_sum(
+                pf.ravel(), seg_dst, num_segments=B * n
+            ).reshape(B, n)
+            od = jnp.take_along_axis(out_deg, a_src, axis=1)
+            idg = jnp.take_along_axis(in_deg, a_dst, axis=1)
+            rate = jnp.minimum(
+                jnp.minimum(
+                    up[a_src] / jnp.maximum(od, 1.0),
+                    dn[a_dst] / jnp.maximum(idg, 1.0),
+                ),
+                bw[a_src, a_dst],
+            )
+            warc = comp[a_src] + lat[a_src, a_dst] + model_mbits / rate
+            warc = jnp.where(present, warc, -INF)
+            src_all = jnp.concatenate([a_src, sl], axis=1)
+            dst_all = jnp.concatenate([a_dst, sl], axis=1)
+            w_all = jnp.concatenate([warc, comp_sl], axis=1)
+            tau = batched_cycle_time_sparse_jax(src_all, dst_all, w_all, n)
+            fwd = reach_all(a_src, (boff + a_dst).ravel(), pf)
+            bwd = reach_all(a_dst, (boff + a_src).ravel(), pf)
+            strong = jnp.all((fwd > 0) & (bwd > 0), axis=1)
+            deg_ok = jnp.all(out_deg <= delta_max, axis=1) & jnp.all(
+                in_deg <= delta_max, axis=1
+            )
+            return jnp.where(strong & deg_ok, tau, INF)
+
+        def step(_, carry):
+            a_src, a_dst, a_act, tau, k = carry
+            k, k1, k2, k3, k4, k5 = jax.random.split(k, 6)
+            mtype = jax.random.randint(k1, (B,), 0, 3)
+            is_add = mtype == 1
+            is_drop = mtype == 2
+            act_logits = jnp.where(a_act, 0.0, -INF)
+            inact_logits = jnp.where(a_act, -INF, 0.0)
+            slot_act = jax.random.categorical(k2, act_logits, axis=1)
+            slot_inact = jax.random.categorical(k3, inact_logits, axis=1)
+            slot = jnp.where(is_add, slot_inact, slot_act).astype(jnp.int32)
+            rand_i = jax.random.randint(k4, (B,), 0, n, dtype=jnp.int32)
+            rand_j = jax.random.randint(k5, (B,), 0, n, dtype=jnp.int32)
+            cur_src = a_src[rows, slot]
+            cur_dst = a_dst[rows, slot]
+            cur_act = a_act[rows, slot]
+            new_src = jnp.where(is_add, rand_i, cur_src)
+            new_dst = jnp.where(is_drop, cur_dst, rand_j)
+            new_act = ~is_drop
+            # Slot sanity (categorical over all -inf logits is garbage),
+            # connectivity-graph membership, and arc uniqueness.
+            slot_ok = jnp.where(is_add, ~cur_act, cur_act)
+            arc_ok = (new_src != new_dst) & allowed[new_src, new_dst]
+            dup = jnp.any(
+                a_act
+                & (a_src == new_src[:, None])
+                & (a_dst == new_dst[:, None])
+                & (slot_ids[None, :] != slot[:, None]),
+                axis=1,
+            )
+            ok = slot_ok & (is_drop | (arc_ok & ~dup))
+            p_src = a_src.at[rows, slot].set(new_src)
+            p_dst = a_dst.at[rows, slot].set(new_dst)
+            p_act = a_act.at[rows, slot].set(new_act)
+            ptau = jnp.where(ok, score(p_src, p_dst, p_act), INF)
+            better = ptau < tau
+            bet = better[:, None]
+            return (
+                jnp.where(bet, p_src, a_src),
+                jnp.where(bet, p_dst, a_dst),
+                jnp.where(bet, p_act, a_act),
+                jnp.where(better, ptau, tau),
+                k,
+            )
+
+        tau0 = score(asrc, adst, aact)
+        a_src, a_dst, a_act, tau, _ = jax.lax.fori_loop(
+            0, n_steps, step, (asrc, adst, aact, tau0, key)
+        )
+        return a_src, a_dst, a_act, tau
+
+    return jax.jit(climb, static_argnums=(11, 12))
+
+
+def _degrees_ok(arcs: Sequence[Tuple[int, int]], n: int, delta: int) -> bool:
+    out = np.zeros(n, dtype=np.int64)
+    inn = np.zeros(n, dtype=np.int64)
+    for (i, j) in arcs:
+        out[i] += 1
+        inn[j] += 1
+    return bool(out.max(initial=0) <= delta and inn.max(initial=0) <= delta)
+
+
+def _seed_states(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    index: Dict[Node, int],
+    n_restarts: int,
+    slots: int,
+    delta_max: int,
+    rng: np.random.Generator,
+    incumbent: Optional[Overlay],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, List[List[Tuple[int, int]]]]:
+    """Initial ``[B, S]`` arc-slot states for the rewire climb, plus the
+    list of structured seed arc lists (for exact f64 re-pricing).
+
+    Restart seeds: the incumbent overlay (if given), the Christofides
+    ring, the bidirected MST, then random Hamiltonian rings.  Seeds
+    violating the ``delta_max`` degree bound are skipped — they would
+    score ``+inf`` forever and burn their restart's whole move budget.
+    On a non-complete connectivity graph random rings routinely hit
+    unrouted pairs (instant ``+inf``), so the remaining restarts cycle
+    over the feasible seeds instead.
+    """
+    n = gc.num_silos
+    seeds: List[List[Tuple[int, int]]] = []
+    if incumbent is not None and all(
+        i in index and j in index and gc.has_edge(i, j)
+        for (i, j) in incumbent.edges
+        if i != j
+    ):  # churn / link failure can invalidate the incumbent's silos or arcs
+        edges = sorted(
+            {(index[i], index[j]) for (i, j) in incumbent.edges if i != j}
+        )
+        if 0 < len(edges) <= slots and _degrees_ok(edges, n, delta_max):
+            seeds.append(edges)
+    try:  # Christofides ring: the strongest cheap designer (Prop. 3.3)
+        tour = christofides_tour(
+            list(gc.silos), lambda i, j: symmetrized_delay_ms(gc, tp, i, j)
+        )
+        ring_arcs = [
+            (index[tour[k]], index[tour[(k + 1) % len(tour)]])
+            for k in range(len(tour))
+        ]
+        if all(
+            gc.has_edge(gc.silos[a], gc.silos[b]) for (a, b) in ring_arcs
+        ):
+            seeds.append(ring_arcs)
+    except (ValueError, KeyError):
+        pass
+    try:
+        tree = mst_edges(gc, lambda i, j: symmetrized_delay_ms(gc, tp, i, j))
+        mst_arcs = [(index[i], index[j]) for (i, j) in _bidir(tree)]
+        if len(mst_arcs) <= slots and _degrees_ok(mst_arcs, n, delta_max):
+            seeds.append(mst_arcs)
+    except ValueError:
+        pass
+    full_mesh = len([1 for (i, j) in gc.latency_ms if i != j]) == n * (n - 1)
+    asrc = np.zeros((n_restarts, slots), dtype=np.int32)
+    adst = np.zeros((n_restarts, slots), dtype=np.int32)
+    aact = np.zeros((n_restarts, slots), dtype=bool)
+    for b in range(n_restarts):
+        if b < len(seeds):
+            arcs = seeds[b]
+        elif full_mesh or not seeds:
+            perm = rng.permutation(n)
+            arcs = [
+                (int(perm[k]), int(perm[(k + 1) % n])) for k in range(n)
+            ]
+        else:
+            arcs = seeds[b % len(seeds)]
+        m = len(arcs)
+        asrc[b, :m] = [a for (a, _) in arcs]
+        adst[b, :m] = [a for (_, a) in arcs]
+        aact[b, :m] = True
+    return asrc, adst, aact, seeds
+
+
+def search_overlays_jit(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    n_restarts: int = 16,
+    n_steps: int = 96,
+    delta_max: int = 8,
+    max_arcs: Optional[int] = None,
+    seed: int = 0,
+    incumbent: Optional[Overlay] = None,
+) -> Overlay:
+    """Device-side topology search: batched rewire hill climb with random
+    restarts, scored by the sparse jitted max-plus engine.
+
+    Unlike the designer heuristics (host-side graph algorithms) and the
+    batched ring search (host-side candidate generation, batched
+    scoring), here *candidate generation itself* runs on the device: each
+    of ``n_restarts`` parallel states proposes one local move per step —
+    rewire an arc endpoint, add an arc, or drop one — under per-silo
+    degree (``delta_max``, in- and out-degree of the overlay, Sect. 3.2's
+    node-capacitated motivation) and connectivity-graph membership
+    constraints, scores all proposals with
+    :func:`repro.core.maxplus_sparse.batched_cycle_time_sparse_jax`
+    (Eq. 3 arc weights, including the degree-dependent access-link
+    sharing, are rebuilt on device per proposal), and accepts
+    improvements.  The whole search lowers to one ``lax.fori_loop`` XLA
+    computation of O(B·n_steps·N·E) work — no host round trips, so it
+    scales to thousands of silos where dense ``[B, N, N]`` scoring hits
+    the memory wall.
+
+    Parameters
+    ----------
+    gc, tp:
+        Connectivity measurements and workload, as for every designer.
+    n_restarts:
+        Parallel hill-climb states.  Seeds, in order: the ``incumbent``
+        (if any), the Christofides ring, the bidirected MST, then random
+        Hamiltonian rings.  The ring seed is load-bearing: with it in
+        the restart pool (and the exact f64 re-pricing below) the result
+        is guaranteed never worse than the paper's RING designer.
+    n_steps:
+        Rewire moves proposed per restart (static: changing it triggers
+        one recompile).
+    delta_max:
+        Max in-degree and out-degree per silo.
+    max_arcs:
+        Arc-slot capacity S (default ``2 N``): add moves beyond it are
+        rejected, which also caps device memory at O(B·S).
+    seed:
+        Seeds both the restart rings and the device move stream.
+    incumbent:
+        Optional overlay to seed restart 0 from — the controller passes
+        its active overlay so the search explores *local* repairs first.
+
+    Returns
+    -------
+    The best of {climb result, structured seeds}, re-priced exactly (f64,
+    sparse engine) so the result is never worse than a feasible seed
+    (``name="sparse_rewire"``).  Raises ``ValueError`` if neither the
+    climb nor any seed reaches a strongly-connected, degree-feasible
+    state.
+    """
+    n = gc.num_silos
+    if n < 2:
+        raise ValueError("sparse-rewire search needs at least 2 silos")
+    index = {v: k for k, v in enumerate(gc.silos)}
+    slots = max(max_arcs if max_arcs is not None else 2 * n, n)
+    if incumbent is not None:
+        slots = max(slots, len({e for e in incumbent.edges if e[0] != e[1]}))
+    lat = np.ones((n, n), dtype=np.float32)
+    bw = np.ones((n, n), dtype=np.float32)
+    allowed = np.zeros((n, n), dtype=bool)
+    for (i, j), l in gc.latency_ms.items():
+        if i == j:
+            continue
+        a, b = index[i], index[j]
+        lat[a, b] = l
+        bw[a, b] = gc.available_bw_gbps[(i, j)]
+        allowed[a, b] = True
+    comp = np.array(
+        [tp.local_steps * gc.silo_params[v].comp_time_ms for v in gc.silos],
+        dtype=np.float32,
+    )
+    up = np.array(
+        [gc.silo_params[v].uplink_gbps for v in gc.silos], dtype=np.float32
+    )
+    dn = np.array(
+        [gc.silo_params[v].downlink_gbps for v in gc.silos], dtype=np.float32
+    )
+    rng = np.random.default_rng(seed)
+    asrc, adst, aact, seed_arcs = _seed_states(
+        gc, tp, index, n_restarts, slots, delta_max, rng, incumbent
+    )
+    if "climb" not in _REWIRE_JIT:
+        _REWIRE_JIT["climb"] = _build_rewire_climb()
+    import jax
+
+    a_src, a_dst, a_act, tau = _REWIRE_JIT["climb"](
+        lat, bw, allowed, comp, up, dn, np.float32(tp.model_size_mbits),
+        asrc, adst, aact, jax.random.PRNGKey(seed),
+        int(n_steps), int(delta_max),
+    )
+    # Exact f64 re-pricing of the climb's best restart AND the structured
+    # seeds, all through the sparse engine (no dense N^2 blowup).  The
+    # climb accepts moves by f32 score, so comparing the final candidates
+    # in f64 is what makes the "never worse than the seeds" guarantee
+    # exact rather than f32-approximate.
+    tau = np.asarray(tau)
+    best = int(np.argmin(tau))
+    candidates: List[List[Tuple[int, int]]] = []
+    if np.isfinite(tau[best]):
+        b_src = np.asarray(a_src[best])
+        b_dst = np.asarray(a_dst[best])
+        keep = np.asarray(a_act[best]) & (b_src != b_dst) & allowed[b_src, b_dst]
+        candidates.append(
+            [(int(i), int(j)) for (i, j) in zip(b_src[keep], b_dst[keep])]
+        )
+    candidates.extend(seed_arcs)
+    if not candidates:
+        raise ValueError(
+            "sparse-rewire search found no strongly-connected candidate"
+        )
+    pool = sorted({a for arcs in candidates for a in arcs})
+    pool_index = {a: k for k, a in enumerate(pool)}
+    masks = np.zeros((len(candidates), len(pool)), dtype=bool)
+    for c, arcs in enumerate(candidates):
+        masks[c, [pool_index[a] for a in arcs]] = True
+    pool_lbl = [(gc.silos[i], gc.silos[j]) for (i, j) in pool]
+    eb = batched_overlay_delay_edges(gc, tp, pool_lbl, masks)
+    strong = batched_is_strongly_connected_sparse(eb)
+    taus = np.where(strong, batched_cycle_time_sparse(eb), np.inf)
+    k = int(np.argmin(taus))
+    if not np.isfinite(taus[k]):
+        raise ValueError(
+            "sparse-rewire search found no strongly-connected candidate"
+        )
+    edges = tuple(pool_lbl[e] for e in np.nonzero(masks[k])[0])
+    return Overlay(
+        name="sparse_rewire", edges=edges, cycle_time_ms=float(taus[k])
+    )
+
+
+# ---------------------------------------------------------------------------
 # Registry used by benchmarks / launcher
 
 
@@ -519,6 +898,14 @@ def design_overlay(
     *,
     center: Optional[Node] = None,
 ) -> Overlay:
+    """Run one named designer on (``gc``, ``tp``) and return its
+    :class:`Overlay`.
+
+    ``kind`` is one of :data:`OVERLAY_KINDS`: ``star``, ``mst``,
+    ``ring``, ``ring_2opt``, ``delta_mbst`` (Algorithm 1), or
+    ``sparse_rewire`` (the device-side jitted search); ``center`` pins
+    the STAR orchestrator.  The registry the benchmarks, launcher, and
+    controller all design through."""
     kind = kind.lower()
     if kind == "star":
         return star_overlay(gc, tp, center=center)
@@ -530,7 +917,11 @@ def design_overlay(
         return two_opt_ring_overlay(gc, tp)
     if kind in ("delta_mbst", "dmbst"):
         return algorithm1_mbst(gc, tp)
+    if kind in ("sparse_rewire", "sparse-rewire"):
+        return search_overlays_jit(gc, tp)
     raise KeyError(f"unknown overlay kind {kind!r}")
 
 
-OVERLAY_KINDS = ("star", "mst", "delta_mbst", "ring", "ring_2opt")
+OVERLAY_KINDS = (
+    "star", "mst", "delta_mbst", "ring", "ring_2opt", "sparse_rewire",
+)

@@ -27,6 +27,7 @@ EARTH_RADIUS_KM = 6371.0
 
 
 def haversine_km(a: LatLon, b: LatLon) -> float:
+    """Great-circle distance in km between two (lat, lon) points."""
     (lat1, lon1), (lat2, lon2) = a, b
     p1, p2 = math.radians(lat1), math.radians(lat2)
     dp = math.radians(lat2 - lat1)

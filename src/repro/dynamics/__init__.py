@@ -28,10 +28,12 @@ closes the loop, in three layers:
 
 * :mod:`~repro.dynamics.controller` — **online controller**.  Watches
   measured round durations against the max-plus prediction, and on
-  sustained regression re-runs topology design (Sect. 3/4 designers plus
-  a batched random-ring search — hundreds of candidates in one
-  ``batched_cycle_time`` call) on the updated connectivity estimate,
-  explains the new bottleneck via the critical circuit, and hot-swaps the
+  sustained regression re-runs topology design (Sect. 3/4 designers, a
+  batched random-ring search — hundreds of candidates in one
+  ``batched_cycle_time`` call — and the device-side sparse-rewire hill
+  climb :func:`~repro.core.topologies.search_overlays_jit` seeded from
+  the incumbent overlay) on the updated connectivity estimate, explains
+  the new bottleneck via the critical circuit, and hot-swaps the
   resulting :class:`~repro.fed.gossip.GossipPlan` through a
   :class:`~repro.fed.gossip.PlanSlot`.
 

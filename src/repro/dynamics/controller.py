@@ -11,11 +11,14 @@ detaches from the max-plus prediction.  The controller
    fast rounds mean vanished arcs — and a strike count to ignore
    one-off jitter);
 2. on sustained regression, pulls a fresh connectivity estimate from the
-   measurement service and **re-designs**: every Table 1 designer plus
-   hundreds of seeded ring perturbations, all scored in one call to the
+   measurement service and **re-designs**: every Table 1 designer,
+   hundreds of seeded ring perturbations scored in one call to the
    batched max-plus engine (`[B, N, N]` Karp — re-scoring ~256 overlays
    at N=22 takes well under a second, cheap enough to live inside the
-   training loop);
+   training loop), plus the device-side sparse-rewire hill climb
+   (:func:`repro.core.topologies.search_overlays_jit`) seeded from the
+   *incumbent* overlay — local arc repairs the ring/tree candidate
+   families cannot express;
 3. **explains** the winning overlay's bottleneck via the (vectorized)
    critical circuit — the links that throttle throughput;
 4. **emits** the new :class:`~repro.fed.gossip.GossipPlan` through
@@ -45,7 +48,7 @@ from ..core.maxplus_vec import (
     critical_circuit_dense,
     timing_recursion_dense,
 )
-from ..core.topologies import Overlay, design_overlay
+from ..core.topologies import Overlay, design_overlay, search_overlays_jit
 from ..fed.gossip import GossipPlan, PlanSlot
 from ..fed.topology_runtime import plan_from_overlay
 
@@ -54,6 +57,15 @@ Arc = Tuple[int, int]
 
 @dataclass(frozen=True)
 class ControllerConfig:
+    """Tuning knobs of :class:`OnlineTopologyController`.
+
+    ``rewire_restarts``/``rewire_steps`` budget the device-side
+    sparse-rewire search (:func:`repro.core.topologies.search_overlays_jit`)
+    that extends the re-design candidate pool beyond rings and the
+    designer heuristics with local edge rewires of the *incumbent*
+    overlay; ``rewire_restarts=0`` disables it (e.g. on jax-free hosts).
+    """
+
     window: Optional[int] = None  # rolling-mean span; None = one ring period (N)
     regression_ratio: float = 1.04  # measured / predicted-profile max triggering a strike
     patience: int = 2  # consecutive regressed rounds before re-design
@@ -62,6 +74,8 @@ class ControllerConfig:
     calibration_rounds: int = 64  # simulated rounds behind the expected profile
     n_candidates: int = 256  # seeded ring perturbations per re-design
     designers: Tuple[str, ...] = ("ring", "ring_2opt", "mst", "delta_mbst")
+    rewire_restarts: int = 8  # parallel sparse-rewire climb states (0 = off)
+    rewire_steps: int = 48  # device-side rewire moves per restart
     seed: int = 0
 
 
@@ -129,12 +143,19 @@ def design_best_overlay(
     n_candidates: int = 256,
     designers: Sequence[str] = ControllerConfig.designers,
     rng: Optional[np.random.Generator] = None,
+    incumbent: Optional[Overlay] = None,
+    rewire_restarts: int = 0,
+    rewire_steps: int = 48,
 ) -> Tuple[Overlay, int]:
     """(best overlay, number of candidates scored) on the given estimate.
 
     Candidates = each designer heuristic (skipping any that cannot run on
-    the current graph, e.g. δ-MBST on a partitioned estimate) plus the
-    batched random-ring search."""
+    the current graph, e.g. δ-MBST on a partitioned estimate), the
+    batched random-ring search, and — when ``rewire_restarts > 0`` — the
+    device-side sparse-rewire hill climb seeded from ``incumbent``
+    (:func:`repro.core.topologies.search_overlays_jit`), which explores
+    local repairs of the running overlay the ring/tree families cannot
+    express.  The rewire search is skipped silently if jax is missing."""
     rng = np.random.default_rng(0) if rng is None else rng
     candidates: List[Overlay] = []
     scored = 0
@@ -148,6 +169,23 @@ def design_best_overlay(
     scored += n_candidates
     if ring is not None:
         candidates.append(ring)
+    if rewire_restarts > 0:
+        try:
+            candidates.append(
+                search_overlays_jit(
+                    gc,
+                    tp,
+                    n_restarts=rewire_restarts,
+                    n_steps=rewire_steps,
+                    seed=int(rng.integers(1 << 31)),
+                    incumbent=incumbent,
+                )
+            )
+            scored += rewire_restarts * rewire_steps
+        except ImportError:
+            pass
+        except ValueError:
+            pass
     if not candidates:
         raise ValueError("no feasible overlay candidate on the current estimate")
     return min(candidates, key=lambda ov: ov.cycle_time_ms), scored
@@ -261,6 +299,9 @@ class OnlineTopologyController:
             n_candidates=self.config.n_candidates,
             designers=self.config.designers,
             rng=self._rng,
+            incumbent=self.overlay,
+            rewire_restarts=self.config.rewire_restarts,
+            rewire_steps=self.config.rewire_steps,
         )
         W = overlay_delay_matrix(self.gc, self.tp, best.edges)
         tau, circ = critical_circuit_dense(W)

@@ -1,3 +1,23 @@
+"""Federated runtime: DPASGD training over designed overlays.
+
+Public surface:
+
+* :class:`~repro.fed.gossip.GossipPlan` / :class:`~repro.fed.gossip.PlanSlot`
+  — a consensus matrix compiled into a ppermute schedule, and the
+  versioned hot-swap hook the online controller actuates through;
+* :func:`~repro.fed.gossip.gossip_einsum` /
+  :func:`~repro.fed.gossip.gossip_shard_map` /
+  :func:`~repro.fed.gossip.collective_bytes_per_round` — the gossip
+  lowerings and their traffic model;
+* :class:`~repro.fed.dpasgd.DPASGDConfig`,
+  :func:`~repro.fed.dpasgd.make_train_step`,
+  :func:`~repro.fed.dpasgd.init_state`,
+  :func:`~repro.fed.dpasgd.local_sgd_steps` — the Eq. 2 train step;
+* :func:`~repro.fed.topology_runtime.plan_from_overlay` — the bridge
+  from a designed :class:`~repro.core.topologies.Overlay` to a runtime
+  plan.
+"""
+
 from .gossip import (
     GossipPlan,
     PlanSlot,

@@ -34,6 +34,15 @@ from .gossip import GossipPlan, gossip_einsum, gossip_shard_map
 
 @dataclass(frozen=True)
 class DPASGDConfig:
+    """Federation knobs of the DPASGD train step.
+
+    ``local_steps`` is the paper's s (local mini-batch steps between
+    mixes); ``gossip_impl`` picks the consensus lowering (see module
+    docstring); ``silo_axis`` names the mesh axis hosting one silo per
+    index; ``mix_every``/``accum_steps`` are runtime extensions (gossip
+    every k-th step, gradient accumulation within a local step).
+    """
+
     local_steps: int = 1            # s
     gossip_impl: str = "ppermute"   # "einsum" | "ppermute" | "pallas" | "none"
     silo_axis: Optional[str] = None  # mesh axis hosting silo replicas
@@ -163,7 +172,12 @@ def make_train_step(
 
 def init_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
                dtype=jnp.float32):
-    """Initialize (possibly silo-stacked) training state."""
+    """Initialize training state for :func:`make_train_step`.
+
+    Returns ``{"params", "opt_state", "step"}``; with ``cfg.n_silos > 1``
+    every params/opt-state leaf gains a leading ``[n_silos]`` dimension
+    (one independently-seeded model per silo) meant to be sharded over
+    the silo mesh axis."""
     from repro.models import init_params
     from repro.models.transformer import model_specs
 

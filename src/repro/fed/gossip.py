@@ -49,7 +49,20 @@ else:  # jax 0.4.x: experimental API, check_rep instead of check_vma
 
 @dataclass(frozen=True)
 class GossipPlan:
-    """Compiled consensus schedule."""
+    """Compiled consensus schedule: one overlay's mixing as collectives.
+
+    Attributes
+    ----------
+    matrix:
+        ``[n, n]`` doubly-stochastic consensus matrix A (support = the
+        overlay's arcs + self loops).
+    terms:
+        The Birkhoff decomposition of A as ``(coeff, perm)`` pairs, where
+        ``perm[i]`` is the silo that destination i *receives from*; each
+        non-identity term lowers to one ``jax.lax.ppermute``.
+    n_silos:
+        n, the silo count (== the silo mesh-axis size at runtime).
+    """
 
     matrix: np.ndarray                       # [n, n] doubly stochastic
     terms: Tuple[Tuple[float, Tuple[int, ...]], ...]  # (coeff, recv-from perm)
@@ -57,12 +70,14 @@ class GossipPlan:
 
     @staticmethod
     def from_matrix(A: np.ndarray) -> "GossipPlan":
+        """Decompose a doubly-stochastic ``[n, n]`` matrix into a plan."""
         terms = birkhoff_decomposition(np.asarray(A, np.float64))
         packed = tuple((float(c), tuple(int(x) for x in p)) for c, p in terms)
         return GossipPlan(matrix=np.asarray(A), terms=packed, n_silos=A.shape[0])
 
     @property
     def num_transfers(self) -> int:
+        """Non-identity permutations = point-to-point transfers per round."""
         ident = tuple(range(self.n_silos))
         return sum(1 for (_, p) in self.terms if p != ident)
 
@@ -110,7 +125,14 @@ class PlanSlot:
 
 
 def gossip_einsum(params: Any, A: jax.Array) -> Any:
-    """Reference: dense mixing over the leading silo dimension."""
+    """Reference gossip: dense mixing over the leading silo dimension.
+
+    ``params`` is a pytree whose leaves carry a leading silo dim of size
+    n; ``A`` is the ``[n, n]`` consensus matrix.  Returns the same pytree
+    with every leaf replaced by ``einsum('ij,j...->i...', A, leaf)`` —
+    XLA lowers this to an all-gather over the silo axis, so its traffic
+    is overlay-independent (the naive baseline the ppermute schedule
+    beats)."""
     return jax.tree_util.tree_map(
         lambda w: jnp.einsum("ij,j...->i...", A.astype(w.dtype), w), params
     )

@@ -45,6 +45,13 @@ def main() -> int:
     ap.add_argument("--dynamic", action="store_true",
                     help="simulate a time-varying WAN and run the online "
                          "topology controller (silo count follows the underlay)")
+    ap.add_argument("--designer", default="auto",
+                    choices=["auto", "sparse-rewire"],
+                    help="overlay designer for --dynamic: 'sparse-rewire' "
+                         "designs the initial overlay with the jitted "
+                         "rewire search and keeps it in the controller's "
+                         "re-design pool (default: --topology heuristic, "
+                         "rewire search still in the pool)")
     ap.add_argument("--underlay", default="gaia")
     ap.add_argument("--workload", default="inaturalist")
     ap.add_argument("--scenario", default="linkfail",
@@ -103,7 +110,10 @@ def main() -> int:
         M, Tc = WORKLOADS[args.workload]
         tp = TrainingParams(model_size_mbits=M, local_steps=args.local_steps)
         gc0 = underlay.connectivity_graph(comp_time_ms=Tc)
-        kind = args.topology if args.topology in OVERLAY_KINDS else "ring"
+        if args.designer == "sparse-rewire":
+            kind = "sparse_rewire"
+        else:
+            kind = args.topology if args.topology in OVERLAY_KINDS else "ring"
         overlay = design_overlay(kind, gc0, tp)
         print(f"dynamic: {args.underlay} N={n}, {kind} overlay, "
               f"predicted tau={overlay.cycle_time_ms:.1f} ms")
@@ -135,6 +145,9 @@ def main() -> int:
         # Without --dynamic there are no network measurements to design
         # from; the measurement-based kinds fall back to their homogeneous
         # mesh equivalents.
+        if args.designer == "sparse-rewire":
+            print("note: --designer sparse-rewire needs --dynamic "
+                  "(network measurements); ignoring")
         kind = {"delta_mbst": "mst", "ring_2opt": "ring"}.get(
             args.topology, args.topology)
         if kind != args.topology:

@@ -1,0 +1,129 @@
+"""Device-side topology search (`search_overlays_jit`) and its wiring
+into the re-design pool of the dynamics controller."""
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.delays import overlay_delay_matrix
+from repro.core.maxplus_vec import batched_is_strongly_connected
+from repro.core.topologies import search_overlays_jit
+
+pytest.importorskip("jax")
+
+
+def _gaia_problem():
+    u = C.make_underlay("gaia")
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    return u.connectivity_graph(comp_time_ms=Tc), tp
+
+
+def test_search_returns_valid_overlay_with_constraints():
+    gc, tp = _gaia_problem()
+    delta = 3
+    ov = search_overlays_jit(
+        gc, tp, n_restarts=8, n_steps=24, delta_max=delta, seed=0
+    )
+    assert ov.name == "sparse_rewire"
+    W = overlay_delay_matrix(gc, tp, ov.edges)
+    assert bool(batched_is_strongly_connected(W))
+    for v in gc.silos:
+        assert ov.out_degree(v) <= delta
+        assert ov.in_degree(v) <= delta
+    assert np.isfinite(ov.cycle_time_ms) and ov.cycle_time_ms > 0
+
+
+def test_search_never_worse_than_christofides_ring():
+    """The climb is seeded with the Christofides ring and only accepts
+    improvements, so it can never return something worse."""
+    gc, tp = _gaia_problem()
+    ring = C.design_overlay("ring", gc, tp)
+    ov = search_overlays_jit(gc, tp, n_restarts=8, n_steps=24, seed=0)
+    assert ov.cycle_time_ms <= ring.cycle_time_ms + 1e-6
+
+
+def test_search_beats_ring_search_on_gaia():
+    """Acceptance: tau(search_overlays_jit) <= tau(256-candidate ring
+    search) on the Gaia underlay (the wall-clock-budget comparison lives
+    in benchmarks/sparse_search_bench.py)."""
+    from repro.dynamics import search_ring_candidates
+
+    gc, tp = _gaia_problem()
+    ring = search_ring_candidates(gc, tp, 256, np.random.default_rng(0))
+    ov = search_overlays_jit(gc, tp, n_restarts=8, n_steps=48, seed=0)
+    assert ov.cycle_time_ms <= ring.cycle_time_ms + 1e-6
+
+
+def test_search_improves_incumbent_on_sparse_underlay():
+    """On a non-complete connectivity graph the climb must stay within
+    routed pairs and still match/improve an incumbent ring."""
+    u = C.make_underlay("geant")  # sparse: 40 silos, 61 core links
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    ring = C.design_overlay("ring", gc, tp)
+    ov = search_overlays_jit(
+        gc, tp, n_restarts=4, n_steps=32, seed=0, incumbent=ring
+    )
+    assert ov.cycle_time_ms <= ring.cycle_time_ms + 1e-6
+    for (i, j) in ov.edges:
+        assert gc.has_edge(i, j)
+
+
+def test_stale_incumbent_arc_is_skipped_not_crashed():
+    """Regression: a link failure can remove a routed pair from the
+    connectivity estimate while the incumbent overlay still uses it;
+    the search must skip that seed, not KeyError mid-controller."""
+    from repro.core.delays import ConnectivityGraph, SiloParams, TrainingParams
+    from repro.core.topologies import Overlay
+
+    n = 5
+    lat, bw = {}, {}
+    for i in range(n):
+        for j in range(n):
+            if i != j and {i, j} != {1, 2}:  # pair (1,2) partitioned away
+                lat[(i, j)] = 5.0 + abs(i - j)
+                bw[(i, j)] = 1.0
+    params = {i: SiloParams(5.0, 10.0, 10.0) for i in range(n)}
+    gc = ConnectivityGraph(tuple(range(n)), lat, bw, params)
+    tp = TrainingParams(model_size_mbits=10.0, local_steps=1)
+    stale = Overlay(
+        name="ring",
+        edges=((0, 1), (1, 2), (2, 3), (3, 4), (4, 0)),  # uses dead 1->2
+        cycle_time_ms=50.0,
+    )
+    ov = search_overlays_jit(
+        gc, tp, n_restarts=4, n_steps=16, seed=0, incumbent=stale
+    )
+    for (i, j) in ov.edges:
+        assert gc.has_edge(i, j)
+
+
+def test_design_overlay_registry_kind():
+    gc, tp = _gaia_problem()
+    ov = C.design_overlay("sparse_rewire", gc, tp)
+    assert ov.name == "sparse_rewire"
+    assert "sparse_rewire" in C.OVERLAY_KINDS
+
+
+def test_design_best_overlay_uses_rewire_pool():
+    """Controller pool: with a rewire budget the result can only improve
+    on the heuristic-designers + ring-search pool."""
+    from repro.dynamics import design_best_overlay
+
+    gc, tp = _gaia_problem()
+    base, scored0 = design_best_overlay(
+        gc, tp, n_candidates=64, rng=np.random.default_rng(0)
+    )
+    best, scored1 = design_best_overlay(
+        gc,
+        tp,
+        n_candidates=64,
+        rng=np.random.default_rng(0),
+        incumbent=base,
+        rewire_restarts=4,
+        rewire_steps=16,
+    )
+    assert best.cycle_time_ms <= base.cycle_time_ms + 1e-6
+    assert scored1 > scored0
