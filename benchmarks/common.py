@@ -41,12 +41,15 @@ def cycle_times_for_network(
                               per_silo_access_gbps=per_silo_access)
     out: Dict[str, float] = {}
     for kind in overlays:
+        # MATCHA rows price through the batched schedule path — identical
+        # numbers to the legacy scalar loop at seed 0 (tested seeded
+        # equivalence), at a fraction of the wall time.
         if kind == "matcha+":
-            m = C.matcha_plus_from_underlay(u, matcha_budget)
-            out[kind] = m.average_cycle_time(gc, tp, rounds=matcha_rounds)
+            s = C.matcha_schedule_from_underlay(u, matcha_budget)
+            out[kind] = s.price(gc, tp, rounds=matcha_rounds).tau_ms
         elif kind == "matcha":
-            m = C.matcha_from_connectivity(gc, matcha_budget)
-            out[kind] = m.average_cycle_time(gc, tp, rounds=matcha_rounds)
+            s = C.matcha_schedule_from_connectivity(gc, matcha_budget)
+            out[kind] = s.price(gc, tp, rounds=matcha_rounds).tau_ms
         elif kind == "star":
             out[kind] = C.star_overlay(gc, tp, center=center).cycle_time_ms
         else:

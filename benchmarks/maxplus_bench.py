@@ -75,7 +75,7 @@ def _time(fn, repeats: int = 1) -> float:
     return best * 1e3  # ms
 
 
-def run(assert_speedup: bool = True) -> None:
+def run(assert_speedup: bool = True, smoke: bool = False) -> None:
     try:
         import jax
 
@@ -87,8 +87,10 @@ def run(assert_speedup: bool = True) -> None:
     print("# max-plus engine throughput (ms per full candidate batch)")
     print("maxplus,N,B,legacy_ms,np64_ms,np32_ms,jax_ms,sp32_ms,speedup_best")
     checked = False
-    for n in (16, 64, 256):
-        for b in (1, 128, 1024):
+    grid_n = (16,) if smoke else (16, 64, 256)
+    grid_b = (1, 128) if smoke else (1, 128, 1024)
+    for n in grid_n:
+        for b in grid_b:
             rng = np.random.default_rng(1000 * n + b)
             dicts, W = random_strong_batch(rng, n, b)
 
@@ -138,7 +140,7 @@ def run(assert_speedup: bool = True) -> None:
                         f"vectorized engine only {best:.1f}x faster than "
                         "legacy at N=64, B=1024"
                     )
-    assert checked
+    assert checked or smoke  # the acceptance cell only exists on the full grid
     print()
 
 

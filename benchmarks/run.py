@@ -1,7 +1,14 @@
 # One function per paper table/figure. Prints aligned tables plus
 # ``name,us_per_call,derived`` CSV lines for the scalar benches; benches
 # that return a metrics dict feed the machine-readable --json report.
+#
+# ``--smoke`` is the CI gate (scripts/ci.sh): benches whose ``run()``
+# accepts a ``smoke`` kwarg execute a seconds-scale configuration (tiny
+# grids, perf asserts off — correctness asserts stay on); benches without
+# one are skipped with a note. This keeps bench code imported and
+# executed on every CI run so it cannot silently rot.
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -14,6 +21,9 @@ def main() -> None:
                     help="write collected bench metrics to this JSON file")
     ap.add_argument("--only", default="",
                     help="run only benches whose module name contains this")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: run smoke-capable benches on tiny "
+                         "configs, skip the rest")
     args = ap.parse_args()
 
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -29,9 +39,13 @@ def main() -> None:
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
             continue
+        smoke_capable = "smoke" in inspect.signature(mod.run).parameters
+        if args.smoke and not smoke_capable:
+            print(f"==== {name} — skipped (no smoke mode)")
+            continue
         print(f"==== {name} " + "=" * (60 - len(name)))
         t = time.time()
-        out = mod.run()
+        out = mod.run(smoke=True) if args.smoke and smoke_capable else mod.run()
         if isinstance(out, dict):
             metrics[name] = out
         print(f"[{name} done in {time.time()-t:.1f}s]\n")

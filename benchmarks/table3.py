@@ -11,11 +11,12 @@ from .common import PAPER_TABLE3, cycle_times_for_network
 import repro.core as C
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     print("# Table 3 — cycle time (ms); paper values in []")
     hdr = f"{'network':8s} {'STAR':>14s} {'MATCHA+':>14s} {'MST':>14s} {'dMBST':>14s} {'RING':>14s}  {'ring/star':>9s} {'ring/matcha':>11s}"
     print(hdr)
-    for name in C.NETWORK_NAMES:
+    networks = C.NETWORK_NAMES[:2] if smoke else C.NETWORK_NAMES
+    for name in networks:
         t0 = time.time()
         ct = cycle_times_for_network(name)
         p = PAPER_TABLE3[name]

@@ -20,3 +20,7 @@ python -m pytest -x -q tests/test_readme_quickstart.py
 echo "== tier-1 =="
 # --ignore: the docs gate already ran that file; don't run it twice
 python -m pytest -x -q --ignore=tests/test_readme_quickstart.py "$@"
+echo "== bench smoke =="
+# Seconds-scale pass over the smoke-capable benchmarks (tiny grids, perf
+# asserts off, correctness asserts on) so bench code cannot silently rot.
+python -m benchmarks.run --smoke

@@ -50,11 +50,15 @@ from .maxplus_sparse import (
     batched_is_strongly_connected_sparse,
     batched_overlay_delay_edges,
     batched_timing_recursion_sparse,
+    critical_circuit_sparse,
     cycle_time_sparse,
     dense_to_edge_batch,
     edge_batch_to_dense,
     reachable_from_sparse,
     scc_labels_sparse,
+    timing_recursion_time_varying_sparse,
+    timing_recursion_time_varying_sparse_jax,
+    timing_recursion_unique_rounds_sparse,
 )
 from .delays import (
     ConnectivityGraph,
@@ -79,6 +83,8 @@ from .networks_data import (
 from .topologies import (
     Overlay,
     design_overlay,
+    design_schedule,
+    SCHEDULE_KINDS,
     star_overlay,
     mst_overlay,
     ring_overlay,
@@ -92,6 +98,19 @@ from .topologies import (
     OVERLAY_KINDS,
 )
 from .matcha import Matcha, matcha_from_connectivity, matcha_plus_from_underlay, greedy_edge_coloring
+from .schedule import (
+    DEFAULT_MATCHA_BUDGETS,
+    FixedSchedule,
+    MatchaSchedule,
+    Schedule,
+    ScheduleEstimate,
+    ScheduleInfeasibleError,
+    average_cycle_times_batched,
+    design_matcha_schedule,
+    matcha_schedule_from_connectivity,
+    matcha_schedule_from_underlay,
+    schedule_from_matcha,
+)
 from .consensus import (
     local_degree_matrix,
     ring_matrix,

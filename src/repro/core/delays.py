@@ -217,10 +217,12 @@ def batched_overlay_delay_matrices(
     bwa = np.array([gc.available_bw_gbps[(i, j)] for (i, j) in arcs])
     up = np.array([gc.silo_params[v].uplink_gbps for v in gc.silos])
     dn = np.array([gc.silo_params[v].downlink_gbps for v in gc.silos])
-    # Per-candidate degrees: one boolean matmul against arc-endpoint one-hots.
+    # Per-candidate degrees: one matmul against arc-endpoint one-hots
+    # (cast first: numpy's bool-times-float matmul path is far slower).
     eye = np.eye(n)
-    out_deg = masks @ eye[src]  # [B, N]
-    in_deg = masks @ eye[dst]
+    maskf = masks.astype(np.float64)
+    out_deg = maskf @ eye[src]  # [B, N]
+    in_deg = maskf @ eye[dst]
     rate = np.minimum(
         up[src][None, :] / np.maximum(out_deg[:, src], 1.0),
         dn[dst][None, :] / np.maximum(in_deg[:, dst], 1.0),

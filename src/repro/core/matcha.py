@@ -55,6 +55,15 @@ class Matcha:
     matchings: List[List[Pair]]
     budget: float  # C_b
 
+    def __post_init__(self):
+        # budget <= 0 never activates a matching, so the Appendix G.3
+        # resample-until-nonempty loop in sample_round would spin forever;
+        # budget > 1 is not a probability.  Fail at construction instead.
+        if not (0.0 < self.budget <= 1.0):
+            raise ValueError(
+                f"MATCHA budget C_b must be in (0, 1], got {self.budget!r}"
+            )
+
     @staticmethod
     def from_base_graph(pairs: Sequence[Pair], budget: float = 0.5) -> "Matcha":
         return Matcha(matchings=greedy_edge_coloring(list(pairs)), budget=budget)

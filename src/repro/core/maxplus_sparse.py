@@ -362,6 +362,183 @@ def batched_timing_recursion_sparse(
     return out
 
 
+def timing_recursion_unique_rounds_sparse(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w_unique: np.ndarray,
+    round_ids: np.ndarray,
+    num_nodes: int,
+    t0: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Eq. 4 recursion with round-varying weights drawn from a pool of
+    distinct weight rows — the kernel behind randomized-schedule (MATCHA)
+    pricing.
+
+    A randomized plan distribution samples a fresh overlay every round,
+    but the *candidate arc pool* (matching arcs + computation self-loops)
+    is fixed: only the weights change (``-inf`` = the arc was not sampled
+    this round), and at realistic budgets many rounds repeat the same
+    activation subset.  So the batch is
+
+    ``src``, ``dst``:
+        ``[E]`` int arc endpoints, shared by every chain and round.
+    ``w_unique``:
+        ``[U, E]`` distinct weight rows (``-inf`` marks an absent arc).
+    ``round_ids``:
+        ``[C, R]`` int — round k of chain c uses graph
+        ``(src, dst, w_unique[round_ids[c, k]])``.  C is the number of
+        independent Monte-Carlo chains (e.g. budgets × seeds).
+
+    The full ``[C, R, E]`` stack is never materialized: each step gathers
+    its ``[C, E]`` weight rows from the pool.  A vertex with no present
+    self-loop at round k observes its own previous start (weight 0),
+    matching :func:`batched_timing_recursion_sparse`.
+
+    Returns ``[C, R+1, N]`` start-time trajectories (``t0``: optional
+    ``[C, N]`` initial starts, default zeros).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w_unique = np.asarray(w_unique, dtype=np.float64)
+    round_ids = np.asarray(round_ids, dtype=np.int64)
+    if w_unique.ndim != 2 or w_unique.shape[1] != src.shape[0]:
+        raise ValueError(
+            f"expected w_unique [U, E] with E == len(src); got "
+            f"{w_unique.shape} vs {src.shape[0]} arcs"
+        )
+    if round_ids.ndim != 2:
+        raise ValueError(f"expected round_ids [C, R], got {round_ids.shape}")
+    C, R = round_ids.shape
+    E = src.shape[0]
+    N = int(num_nodes)
+    self_arc = src == dst
+    # Cheap common case first: every vertex has an always-present self
+    # loop (Eq. 3 pools), so the carry-over merge is a no-op everywhere.
+    sv = src[self_arc]
+    all_self = (
+        np.unique(sv).size == N
+        and bool((w_unique[:, self_arc] > NEG_INF).all())
+    )
+    has_self_u = None
+    if not all_self:
+        # has_self_u[u, v]: does weight row u carry a self-loop at v?
+        has_self_u = np.zeros((w_unique.shape[0], N), dtype=bool)
+        if sv.size:
+            np.logical_or.at(
+                has_self_u,
+                (np.arange(w_unique.shape[0])[:, None], sv[None, :]),
+                w_unique[:, self_arc] > NEG_INF,
+            )
+    t = (
+        np.zeros((C, N), dtype=np.float64)
+        if t0 is None
+        else np.asarray(t0, dtype=np.float64).copy()
+    )
+    out = np.empty((C, R + 1, N), dtype=np.float64)
+    out[:, 0] = t
+    # Fast path: when every vertex owns at least one arc slot (true for
+    # Eq. 3 pools, whose N computation self-loops are always present) a
+    # dst-presorted reduceat yields [C, N] directly — no flatten, no
+    # scatter — and the recursion is three numpy calls per round.
+    order = np.argsort(dst, kind="stable")
+    dsts = dst[order]
+    group_starts = np.flatnonzero(np.r_[True, dsts[1:] != dsts[:-1]])
+    full_cover = np.array_equal(dsts[group_starts], np.arange(N))
+    if full_cover:
+        srcs = src[order]
+        # Callers that pre-sort arcs by dst (the pricing hot path) skip
+        # this whole-pool column gather.
+        wu = w_unique if np.array_equal(dsts, dst) else w_unique[:, order]
+        ids_t = np.ascontiguousarray(round_ids.T)  # [R, C] row per step
+        reduceat, maximum = np.maximum.reduceat, np.maximum
+        for k in range(R):
+            ids_k = ids_t[k]
+            vals = t[:, srcs]
+            vals += wu[ids_k]
+            nxt = reduceat(vals, group_starts, axis=1)
+            t = nxt if all_self else maximum(
+                nxt, np.where(has_self_u[ids_k], NEG_INF, t)
+            )
+            out[:, k + 1] = t
+        return out
+    seg = _segments_by(
+        (np.repeat(np.arange(C, dtype=np.int64), E) * N + np.tile(dst, C))
+    )
+    for k in range(R):
+        vals = t[:, src] + w_unique[round_ids[:, k]]
+        nxt = _segment_max(vals.ravel(), seg, C * N, np.float64).reshape(C, N)
+        t = nxt if all_self else np.maximum(
+            nxt, np.where(has_self_u[round_ids[:, k]], NEG_INF, t)
+        )
+        out[:, k + 1] = t
+    return out
+
+
+def timing_recursion_time_varying_sparse(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    num_nodes: int,
+    t0: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Eq. 4 recursion with a dense ``[C, R, E]`` round-varying weight
+    stack over a fixed arc layout.
+
+    Convenience wrapper over :func:`timing_recursion_unique_rounds_sparse`
+    with every (chain, round) treated as its own weight row — use the
+    unique-rounds form directly when rounds repeat activation subsets.
+    Returns ``[C, R+1, N]``.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if w.ndim != 3 or w.shape[-1] != np.asarray(src).shape[0]:
+        raise ValueError(
+            f"expected w [C, R, E] with E == len(src); got {w.shape} vs "
+            f"{np.asarray(src).shape[0]} arcs"
+        )
+    C, R, E = w.shape
+    ids = np.arange(C * R, dtype=np.int64).reshape(C, R)
+    return timing_recursion_unique_rounds_sparse(
+        src, dst, w.reshape(C * R, E), ids, num_nodes, t0
+    )
+
+
+def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=None):
+    """Jittable JAX twin of :func:`timing_recursion_time_varying_sparse`.
+
+    Same contract (``src``/``dst`` ``[E]``, ``w`` ``[C, R, E]``, returns
+    ``[C, R+1, N]``) as one ``lax.scan`` over rounds with a segment-max
+    per step, so a whole budget-sweep fuses into a single device
+    computation.  ``num_nodes`` must be static under ``jax.jit``.
+    Assumes every vertex has a present self-loop each round (true for
+    Eq. 3 pricing, whose computation self-loops are always active) — the
+    per-round carry-over special case is host-path-only.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    w = jnp.asarray(w)
+    C, R, E = w.shape
+    N = int(num_nodes)
+    src = jnp.asarray(src, dtype=jnp.int32)
+    dst = jnp.asarray(dst, dtype=jnp.int32)
+    seg_ids = (jnp.arange(C, dtype=jnp.int32)[:, None] * N + dst[None, :]).ravel()
+    t0 = (
+        jnp.zeros((C, N), dtype=w.dtype)
+        if t0 is None
+        else jnp.asarray(t0, dtype=w.dtype)
+    )
+
+    def step(t, wk):
+        vals = t[:, src] + wk
+        nxt = jax.ops.segment_max(
+            vals.ravel(), seg_ids, num_segments=C * N
+        ).reshape(C, N)
+        return nxt, nxt
+
+    _, levels = jax.lax.scan(step, t0, jnp.swapaxes(w, 0, 1))  # [R, C, N]
+    return jnp.concatenate([t0[:, None, :], jnp.swapaxes(levels, 0, 1)], axis=1)
+
+
 # ---------------------------------------------------------------------------
 # Reachability / SCC over edge lists
 
@@ -441,6 +618,97 @@ def scc_labels_sparse(
         ncomp += 1
 
 
+def critical_circuit_sparse(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    num_nodes: int,
+    *,
+    tau: Optional[float] = None,
+) -> Tuple[float, list]:
+    """(tau, circuit) attaining the max cycle mean of one edge-list
+    digraph — the sparse analogue of
+    :func:`repro.core.maxplus_vec.critical_circuit_dense` (kept as the
+    oracle), so bottleneck explanation never materializes an ``[N, N]``
+    matrix: O(N·E) work, O(N + E) extra memory.
+
+    ``src``/``dst``/``w`` are flat ``[E]`` arrays (``-inf`` = padding).
+    Longest-path potentials under the reduced weights ``w - tau`` converge
+    in <= N segment-max sweeps; the *tight* arcs
+    ``pot[src] + w' >= pot[dst]`` form a subgraph whose non-trivial SCCs
+    (plus tight self-loops) carry exactly the circuits of mean ``tau``;
+    the returned circuit is a deterministic walk inside one of them,
+    closed as ``[v0, ..., v0]`` (empty for acyclic graphs).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64)
+    N = int(num_nodes)
+    if tau is None:
+        tau = float(
+            batched_cycle_time_sparse(
+                EdgeBatch(
+                    src[None].astype(np.int32), dst[None].astype(np.int32),
+                    w[None], N,
+                )
+            )[0]
+        )
+    if tau == NEG_INF or N == 0:
+        return NEG_INF, []
+    present = w > NEG_INF
+    s, d = src[present], dst[present]
+    wr = w[present] - tau
+    eps = 1e-9 * max(1.0, abs(tau))
+    seg = _segments_by(d)
+    pot = np.zeros(N)
+    for _ in range(N):
+        cand = _segment_max(pot[s] + wr, seg, N, np.float64)
+        nxt = np.maximum(pot, cand)
+        if np.all(nxt <= pot + eps):
+            pot = nxt
+            break
+        pot = nxt
+    tight = pot[s] + wr >= pot[d] - 10 * eps
+    ts, td = s[tight], d[tight]
+    if ts.size == 0:  # numerically degenerate; caller falls back to dense
+        return tau, []
+    self_loops = ts[ts == td]
+    labels = scc_labels_sparse(ts, td, N)
+    counts = np.bincount(labels, minlength=N if labels.size else 0)
+    on_cycle = np.zeros(N, dtype=bool)
+    on_cycle[self_loops] = True
+    multi = counts[labels] >= 2 if labels.size else np.zeros(0, dtype=bool)
+    on_cycle[np.flatnonzero(multi)] = True
+    hits = np.flatnonzero(on_cycle)
+    if hits.size == 0:
+        return tau, []
+    v0 = int(hits[0])
+    if counts.size == 0 or counts[labels[v0]] < 2:
+        return tau, [v0, v0]  # tight self-loop
+    # Deterministic walk over tight arcs restricted to v0's tight SCC:
+    # every vertex there has a tight successor inside the SCC, so the
+    # walk revisits a vertex within N steps; any closed tight walk has
+    # reduced mean exactly 0, i.e. original mean exactly tau.
+    comp = labels[v0]
+    in_comp = (labels[ts] == comp) & (labels[td] == comp) & (ts != td)
+    cs, cd = ts[in_comp], td[in_comp]
+    order = np.lexsort((cd, cs))
+    cs, cd = cs[order], cd[order]
+    starts = np.searchsorted(cs, np.arange(N))
+    ends = np.searchsorted(cs, np.arange(N) + 1)
+    pos = {v0: 0}
+    walk = [v0]
+    cur = v0
+    while True:
+        lo, hi = starts[cur], ends[cur]
+        assert hi > lo, "tight SCC lost the certified circuit"
+        cur = int(cd[lo])
+        if cur in pos:
+            return tau, walk[pos[cur] :] + [cur]
+        pos[cur] = len(walk)
+        walk.append(cur)
+
+
 def _reach_one(
     src: np.ndarray, dst: np.ndarray, n: int, start: int, live: np.ndarray
 ) -> np.ndarray:
@@ -458,6 +726,8 @@ def _reach_one(
 # ---------------------------------------------------------------------------
 # Overlay batches as edge lists (the sparse analogue of
 # delays.batched_overlay_delay_matrices)
+
+
 
 
 def batched_overlay_delay_edges(gc, tp, arcs: Sequence[Arc], masks) -> EdgeBatch:
@@ -481,33 +751,85 @@ def batched_overlay_delay_edges(gc, tp, arcs: Sequence[Arc], masks) -> EdgeBatch
     comp = np.array(
         [tp.local_steps * gc.silo_params[v].comp_time_ms for v in gc.silos]
     )
-    src = np.empty((B, E + n), dtype=np.int32)
-    dst = np.empty((B, E + n), dtype=np.int32)
     w = np.empty((B, E + n), dtype=np.float64)
     # self-loop slots: always present
-    src[:, E:] = np.arange(n, dtype=np.int32)[None, :]
-    dst[:, E:] = src[:, E:]
     w[:, E:] = comp[None, :]
     if E == 0:
-        return EdgeBatch(src, dst, w, n)
+        loops = np.arange(n, dtype=np.int32)
+        src = np.broadcast_to(loops, (B, n))
+        return EdgeBatch(src, src, w, n)
     asrc = np.array([index[i] for (i, _) in arcs], dtype=np.int32)
     adst = np.array([index[j] for (_, j) in arcs], dtype=np.int32)
     if np.any(asrc == adst):
         raise ValueError("arc pool must not contain self-loops")
+    # The arc layout is identical in every row: broadcast views keep the
+    # EdgeBatch contract at O(E) instead of O(B·E) storage.
+    loops = np.arange(n, dtype=np.int32)
+    src = np.broadcast_to(np.concatenate([asrc, loops]), (B, E + n))
+    dst = np.broadcast_to(np.concatenate([adst, loops]), (B, E + n))
     lat = np.array([gc.latency_ms[(i, j)] for (i, j) in arcs])
     bwa = np.array([gc.available_bw_gbps[(i, j)] for (i, j) in arcs])
     up = np.array([gc.silo_params[v].uplink_gbps for v in gc.silos])
     dn = np.array([gc.silo_params[v].downlink_gbps for v in gc.silos])
+    # Per-candidate degrees: one matmul against arc-endpoint one-hots
+    # (cast first: numpy's bool-times-float matmul path is far slower).
     eye = np.eye(n)
-    out_deg = masks @ eye[asrc]  # [B, N]
-    in_deg = masks @ eye[adst]
+    maskf = masks.astype(np.float64)
+    out_deg = maskf @ eye[asrc]  # [B, N]
+    # Matching-derived pools interleave both directions of every pair
+    # ((i,j) at slot 2p, (j,i) at 2p+1) and activate them together, which
+    # makes in-degrees equal out-degrees — skip the second matmul then.
+    symmetric = (
+        E % 2 == 0
+        and np.array_equal(asrc[0::2], adst[1::2])
+        and np.array_equal(adst[0::2], asrc[1::2])
+        and np.array_equal(masks[:, 0::2], masks[:, 1::2])
+    )
+    in_deg = out_deg if symmetric else maskf @ eye[adst]
+    D = int(max(out_deg.max(), in_deg.max(), 1.0))
+    if B > 4 * D * D and D * D * E <= (1 << 24):
+        # Degree-table path: Eq. 3 depends on the mask row only through
+        # (out_deg[src], in_deg[dst]) ∈ [1, D]², so for large batches of
+        # degree-bounded overlays (randomized-schedule pricing: B = rounds
+        # × chains) it is far cheaper to tabulate the E × D × D possible
+        # arc delays once and gather than to re-derive every [B, E] entry.
+        # Same expressions in the same order as the general path below —
+        # the results are bit-identical, not approximately equal.
+        ds = np.arange(1.0, D + 1.0)
+        rate_t = np.minimum(
+            (up[asrc] / ds[:, None])[:, None, :],  # out-degree on axis 0
+            (dn[adst] / ds[:, None])[None, :, :],  # in-degree on axis 1
+        )
+        rate_t = np.minimum(rate_t, bwa[None, None, :])
+        # table[a-1, b-1, e] = delay of arc e at out_deg=a, in_deg=b
+        table = comp[asrc][None, None, :] + lat[None, None, :] + (
+            tp.model_size_mbits / rate_t
+        )
+        oi = np.clip(out_deg.astype(np.int32) - 1, 0, D - 1)[:, asrc]
+        if symmetric:
+            # ii[:, 2p] == oi[:, 2p+1] and vice versa: an even/odd column
+            # swap replaces the second [B, E] index gather outright.
+            ii = np.ascontiguousarray(
+                oi.reshape(B, E // 2, 2)[:, :, ::-1]
+            ).reshape(B, E)
+        else:
+            ii = np.clip(in_deg.astype(np.int32) - 1, 0, D - 1)[:, adst]
+        # flat_idx = (oi·D + ii)·E + e, built in place on oi's buffer;
+        # masked-off arcs route through a -inf sentinel slot appended to
+        # the table (an in-place copyto instead of a boolean scatter).
+        oi *= np.int32(D)
+        oi += ii
+        oi *= np.int32(E)
+        oi += np.arange(E, dtype=np.int32)
+        np.copyto(oi, np.int32(D * D * E), where=~masks)
+        tflat = np.append(table.ravel(), NEG_INF)
+        w[:, :E] = tflat.take(oi)
+        return EdgeBatch(src, dst, w, n)
     rate = np.minimum(
         up[asrc][None, :] / np.maximum(out_deg[:, asrc], 1.0),
         dn[adst][None, :] / np.maximum(in_deg[:, adst], 1.0),
     )
     rate = np.minimum(rate, bwa[None, :])
-    src[:, :E] = asrc[None, :]
-    dst[:, :E] = adst[None, :]
     w[:, :E] = np.where(
         masks, comp[asrc][None, :] + lat[None, :] + tp.model_size_mbits / rate, NEG_INF
     )

@@ -925,3 +925,49 @@ def design_overlay(
 OVERLAY_KINDS = (
     "star", "mst", "delta_mbst", "ring", "ring_2opt", "sparse_rewire",
 )
+
+
+def design_schedule(
+    kind: str,
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    center: Optional[Node] = None,
+    budgets: Optional[Sequence[float]] = None,
+    rounds: int = 150,
+    seeds: Sequence[int] = (0, 1, 2),
+    sample_seed: int = 0,
+):
+    """Run one named designer and return a :class:`repro.core.schedule.Schedule`.
+
+    The schedule-valued superset of :func:`design_overlay`: every
+    :data:`OVERLAY_KINDS` designer is wrapped in a
+    :class:`~repro.core.schedule.FixedSchedule`, and ``kind="matcha"``
+    runs the randomized designer — a budget sweep
+    (:func:`~repro.core.schedule.design_matcha_schedule`) that prices
+    every budget × seed Monte-Carlo chain through the batched sparse
+    engine in one call and returns the budget with the smallest mean τ̄.
+    ``budgets``/``rounds``/``seeds``/``sample_seed`` parameterize the
+    sweep and are ignored for fixed kinds.
+    """
+    from .schedule import (
+        DEFAULT_MATCHA_BUDGETS,
+        FixedSchedule,
+        design_matcha_schedule,
+    )
+
+    kind = kind.lower()
+    if kind == "matcha":
+        schedule, _ = design_matcha_schedule(
+            gc,
+            tp,
+            budgets=DEFAULT_MATCHA_BUDGETS if budgets is None else budgets,
+            rounds=rounds,
+            seeds=seeds,
+            sample_seed=sample_seed,
+        )
+        return schedule
+    return FixedSchedule(design_overlay(kind, gc, tp, center=center))
+
+
+SCHEDULE_KINDS = OVERLAY_KINDS + ("matcha",)

@@ -37,6 +37,15 @@ closes the loop, in three layers:
   resulting :class:`~repro.fed.gossip.GossipPlan` through a
   :class:`~repro.fed.gossip.PlanSlot`.
 
+Randomized plan distributions (:mod:`repro.core.schedule`) are
+first-class throughout: :func:`~repro.dynamics.simulate.schedule_epoch_estimates`
+prices a MATCHA schedule's τ̄ on every epoch of a scenario,
+:meth:`DynamicTimeline.set_schedule` steps the plant on per-round
+sampled topologies, and the controller
+(:attr:`~repro.dynamics.controller.ControllerConfig.matcha_budgets`,
+``schedule_family``) re-fits the distribution on drift and hot-swaps
+fixed ↔ randomized through a :class:`~repro.fed.gossip.ScheduleSlot`.
+
 ``examples/dynamic_topology.py`` runs the whole stack on a Gaia
 core-link failure; ``benchmarks/dynamics_bench.py`` tracks re-design
 latency (candidates/sec) and simulator throughput (scenario-rounds/sec).
@@ -57,12 +66,14 @@ from .events import (
     busiest_core_link,
     link_failure_scenario,
     random_scenario,
+    silo_degrade_scenario,
     static_scenario,
 )
 from .simulate import (
     DynamicRun,
     DynamicTimeline,
     epoch_delay_matrices,
+    schedule_epoch_estimates,
     simulate_dynamic,
     simulate_scenarios_batched,
 )
@@ -71,5 +82,6 @@ from .controller import (
     OnlineTopologyController,
     Redesign,
     design_best_overlay,
+    design_best_schedule,
     search_ring_candidates,
 )

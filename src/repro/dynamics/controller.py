@@ -19,12 +19,22 @@ detaches from the max-plus prediction.  The controller
    (:func:`repro.core.topologies.search_overlays_jit`) seeded from the
    *incumbent* overlay — local arc repairs the ring/tree candidate
    families cannot express;
-3. **explains** the winning overlay's bottleneck via the (vectorized)
-   critical circuit — the links that throttle throughput;
+3. **explains** the winning overlay's bottleneck via the critical
+   circuit — edge-list extraction
+   (:func:`repro.core.maxplus_sparse.critical_circuit_sparse`), so the
+   explanation never densifies at scale;
 4. **emits** the new :class:`~repro.fed.gossip.GossipPlan` through
    :func:`~repro.fed.topology_runtime.plan_from_overlay` into a
    :class:`~repro.fed.gossip.PlanSlot`, the hot-swap hook the training
    loop re-lowers its jitted step from.
+
+Randomized schedules are in the loop too: with
+:attr:`ControllerConfig.matcha_budgets` set, re-design also prices a
+MATCHA plan distribution (one batched budgets × seeds sweep) and — under
+``schedule_family="matcha"`` — re-fits it to every fresh estimate,
+hot-swapping fixed ↔ randomized through a
+:class:`~repro.fed.gossip.ScheduleSlot` (whose per-round sampled plans
+need no step re-lowering: the consensus matrix is a traced input).
 """
 
 from __future__ import annotations
@@ -40,16 +50,23 @@ from ..core.delays import (
     ConnectivityGraph,
     TrainingParams,
     batched_overlay_delay_matrices,
-    overlay_delay_matrix,
+)
+from ..core.maxplus_sparse import (
+    batched_overlay_delay_edges,
+    critical_circuit_sparse,
 )
 from ..core.maxplus_vec import (
     batched_cycle_time,
     batched_is_strongly_connected,
-    critical_circuit_dense,
-    timing_recursion_dense,
+)
+from ..core.schedule import (
+    FixedSchedule,
+    Schedule,
+    ScheduleInfeasibleError,
+    design_matcha_schedule,
 )
 from ..core.topologies import Overlay, design_overlay, search_overlays_jit
-from ..fed.gossip import GossipPlan, PlanSlot
+from ..fed.gossip import GossipPlan, PlanSlot, ScheduleSlot
 from ..fed.topology_runtime import plan_from_overlay
 
 Arc = Tuple[int, int]
@@ -76,6 +93,22 @@ class ControllerConfig:
     designers: Tuple[str, ...] = ("ring", "ring_2opt", "mst", "delta_mbst")
     rewire_restarts: int = 8  # parallel sparse-rewire climb states (0 = off)
     rewire_steps: int = 48  # device-side rewire moves per restart
+    # Randomized-schedule candidates: with a nonempty budget tuple every
+    # re-design also prices a MATCHA schedule at these budgets (one
+    # batched sweep).  Under ``schedule_family="auto"`` it competes with
+    # the fixed pool on Monte-Carlo τ̄ — which it rarely wins, since RING
+    # tends to dominate cycle time (the paper's headline result); under
+    # ``schedule_family="matcha"`` the operator has pinned the family
+    # (for its mixing-per-traffic properties) and re-design *re-fits* the
+    # distribution — matchings from the fresh estimate, budget re-swept —
+    # falling back to the fixed pool only when no matcha schedule is
+    # feasible.  Empty budgets (default) keep the controller
+    # fixed-overlay-only.
+    schedule_family: str = "auto"  # "auto" | "matcha"
+    matcha_budgets: Tuple[float, ...] = ()
+    matcha_rounds: int = 150  # Monte-Carlo rounds per pricing chain
+    matcha_seeds: Tuple[int, ...] = (0, 1, 2)  # chains per budget (CI)
+    calibration_seeds: Tuple[int, ...] = (0, 1, 2)  # randomized-profile envelope
     seed: int = 0
 
 
@@ -84,13 +117,14 @@ class Redesign:
     """One controller actuation, with its audit trail."""
 
     round_idx: int
-    overlay: Overlay
-    plan: GossipPlan
+    overlay: Optional[Overlay]  # None when a randomized schedule won
+    plan: Optional[GossipPlan]  # round-0 plan for randomized schedules
     predicted_tau_ms: float
     measured_ms: float  # rolling round-duration estimate that tripped it
     n_candidates: int  # overlays scored by the batched engine
     elapsed_s: float  # wall time of the whole re-design step
     bottleneck: Tuple[int, ...]  # critical circuit of the new overlay
+    schedule: Optional[Schedule] = None  # the winning schedule (always set)
 
 
 def search_ring_candidates(
@@ -191,6 +225,64 @@ def design_best_overlay(
     return min(candidates, key=lambda ov: ov.cycle_time_ms), scored
 
 
+def design_best_schedule(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    n_candidates: int = 256,
+    designers: Sequence[str] = ControllerConfig.designers,
+    rng: Optional[np.random.Generator] = None,
+    incumbent: Optional[Overlay] = None,
+    rewire_restarts: int = 0,
+    rewire_steps: int = 48,
+    matcha_budgets: Sequence[float] = (),
+    matcha_rounds: int = 150,
+    matcha_seeds: Sequence[int] = (0, 1, 2),
+    sample_seed: int = 0,
+) -> Tuple[Schedule, int]:
+    """(best schedule, number of candidates scored): the schedule-valued
+    superset of :func:`design_best_overlay`.
+
+    The fixed-overlay pool (designers + ring search + sparse rewire) is
+    priced by exact cycle time; with a nonempty ``matcha_budgets`` a
+    MATCHA schedule is additionally priced at every budget × seed chain
+    in one batched engine sweep
+    (:func:`repro.core.schedule.design_matcha_schedule`) and competes on
+    its mean Monte-Carlo τ̄.  Note the comparison is cycle time only —
+    a randomized schedule that wins rounds-per-second still mixes less
+    per round (its budget), which is the caller's tradeoff to configure.
+    """
+    rng = np.random.default_rng(0) if rng is None else rng
+    best_overlay, scored = design_best_overlay(
+        gc,
+        tp,
+        n_candidates=n_candidates,
+        designers=designers,
+        rng=rng,
+        incumbent=incumbent,
+        rewire_restarts=rewire_restarts,
+        rewire_steps=rewire_steps,
+    )
+    best: Schedule = FixedSchedule(best_overlay)
+    best_tau = best_overlay.cycle_time_ms
+    if matcha_budgets:
+        try:
+            sched, est = design_matcha_schedule(
+                gc,
+                tp,
+                budgets=tuple(matcha_budgets),
+                rounds=matcha_rounds,
+                seeds=tuple(matcha_seeds),
+                sample_seed=sample_seed,
+            )
+            scored += len(matcha_budgets) * len(matcha_seeds)
+            if est.tau_ms < best_tau:
+                best, best_tau = sched, est.tau_ms
+        except ScheduleInfeasibleError:  # no routable pairs on this estimate
+            pass
+    return best, scored
+
+
 class OnlineTopologyController:
     """Monitor -> detect -> re-design -> hot-swap, one overlay at a time.
 
@@ -210,17 +302,39 @@ class OnlineTopologyController:
         config: ControllerConfig = ControllerConfig(),
         connectivity_provider: Optional[Callable[[], ConnectivityGraph]] = None,
         plan_slot: Optional[PlanSlot] = None,
+        schedule_slot: Optional[ScheduleSlot] = None,
+        schedule: Optional[Schedule] = None,
     ):
+        """``overlay`` is the initial (or fallback) fixed overlay; pass
+        ``schedule`` to start on a randomized one instead (``overlay``
+        still seeds the incumbent-local rewire search at re-design).
+        ``schedule_slot`` is the schedule-valued hot-swap hook — it
+        receives *every* winner, fixed or randomized; ``plan_slot`` keeps
+        the legacy fixed-plan interface and is skipped (with an audit
+        note) when a randomized schedule wins."""
         self.tp = tp
         self.config = config
         self.gc = gc
         self.overlay = overlay
-        self.predicted_tau_ms = overlay.cycle_time_ms
+        self.schedule: Schedule = (
+            schedule if schedule is not None else FixedSchedule(overlay)
+        )
+        if self.schedule.is_randomized:
+            est = self.schedule.price(
+                gc, tp, rounds=config.matcha_rounds,
+                seeds=(config.matcha_seeds[0],),
+            )
+            self.predicted_tau_ms = est.tau_ms
+        else:
+            self.predicted_tau_ms = overlay.cycle_time_ms
         self.connectivity_provider = connectivity_provider
         self.plan_slot = plan_slot
+        self.schedule_slot = schedule_slot
         self.plan = plan_from_overlay(overlay, len(gc.silos), silos=gc.silos)
         if plan_slot is not None and plan_slot.version == 0:
             plan_slot.swap(self.plan, label="controller-init")
+        if schedule_slot is not None and schedule_slot.version == 0:
+            schedule_slot.swap_schedule(self.schedule, label="controller-init")
         self._rng = np.random.default_rng(config.seed)
         self._window_size = config.window or len(gc.silos)
         self._warmup = (
@@ -237,24 +351,36 @@ class OnlineTopologyController:
         self._calibrate()
 
     def _calibrate(self) -> None:
-        """Expected rolling round-time profile of the active overlay on the
-        current estimate, from the Eq. 4 recursion itself.
+        """Expected rolling round-time profile of the active *schedule* on
+        the current estimate, from the Eq. 4 recursion itself.
 
         Max-plus round durations are not constant — they settle into a
         periodic regime oscillating around tau — so comparing a measured
         rolling mean against bare tau false-alarms on healthy networks.
         Simulating the recursion gives the *whole* predicted profile; the
         detector thresholds against its worst settled rolling mean, which
-        lets ``regression_ratio`` sit a few percent above 1."""
-        W = overlay_delay_matrix(self.gc, self.tp, self.overlay.edges)
+        lets ``regression_ratio`` sit a few percent above 1.  Randomized
+        schedules add sampling variance on top of the max-plus transient,
+        so their band is the envelope over several seeded rollouts
+        (``calibration_seeds``)."""
         w = self._window_size
         rounds = max(self.config.calibration_rounds, 3 * w)
-        times = timing_recursion_dense(W, rounds)
-        durations = np.diff(times.max(axis=1))
-        rolling = np.convolve(durations, np.ones(w) / w, mode="valid")
-        settled = rolling[min(w, len(rolling) - 1) :]
-        self.expected_window_ms = float(settled.max())
-        self.expected_window_min_ms = float(settled.min())
+        seeds = (
+            self.config.calibration_seeds
+            if self.schedule.is_randomized
+            else (0,)
+        )
+        profiles = self.schedule.simulate_rounds_batch(
+            self.gc, self.tp, rounds, seeds
+        )  # all seed chains in one engine call
+        maxes, mins = [], []
+        for durations in profiles:
+            rolling = np.convolve(durations, np.ones(w) / w, mode="valid")
+            settled = rolling[min(w, len(rolling) - 1) :]
+            maxes.append(settled.max())
+            mins.append(settled.min())
+        self.expected_window_ms = float(max(maxes))
+        self.expected_window_min_ms = float(min(mins))
 
     @property
     def measured_ms(self) -> Optional[float]:
@@ -289,28 +415,113 @@ class OnlineTopologyController:
             return None
         return self._redesign(measured)
 
+    def _sparse_bottleneck(self, edges) -> Tuple[int, ...]:
+        """Critical circuit of an edge list on the current estimate via
+        the edge-list extractor — no dense [N, N] materialization, so the
+        explanation step scales with the controller (the dense extractor
+        stays as the tested oracle)."""
+        arcs = [e for e in edges if e[0] != e[1]]
+        if not arcs:
+            return ()
+        eb = batched_overlay_delay_edges(
+            self.gc, self.tp, arcs, np.ones((1, len(arcs)), dtype=bool)
+        )
+        _, circ = critical_circuit_sparse(
+            eb.src[0], eb.dst[0], eb.w[0], self.gc.num_silos
+        )
+        return tuple(self.gc.silos[c] for c in circ)
+
     def _redesign(self, measured: float) -> Redesign:
         t0 = time.perf_counter()
         if self.connectivity_provider is not None:
             self.gc = self.connectivity_provider()
-        best, scored = design_best_overlay(
-            self.gc,
-            self.tp,
-            n_candidates=self.config.n_candidates,
-            designers=self.config.designers,
-            rng=self._rng,
-            incumbent=self.overlay,
-            rewire_restarts=self.config.rewire_restarts,
-            rewire_steps=self.config.rewire_steps,
-        )
-        W = overlay_delay_matrix(self.gc, self.tp, best.edges)
-        tau, circ = critical_circuit_dense(W)
-        bottleneck = tuple(self.gc.silos[c] for c in circ)
-        plan = plan_from_overlay(best, len(self.gc.silos), silos=self.gc.silos)
+        best_sched: Optional[Schedule] = None
+        sched_tau: Optional[float] = None
+        scored = 0
+        if self.config.schedule_family == "matcha" and self.config.matcha_budgets:
+            try:  # family pinned: re-fit the distribution to the estimate
+                best_sched, est = design_matcha_schedule(
+                    self.gc,
+                    self.tp,
+                    budgets=self.config.matcha_budgets,
+                    rounds=self.config.matcha_rounds,
+                    seeds=self.config.matcha_seeds,
+                    sample_seed=int(self._rng.integers(1 << 31)),
+                )
+                sched_tau = est.tau_ms
+                scored = len(self.config.matcha_budgets) * len(
+                    self.config.matcha_seeds
+                )
+            except ScheduleInfeasibleError as e:
+                best_sched = None  # infeasible: fall back to the fixed pool
+                if self.schedule_slot is not None:  # leave an audit trail
+                    self.schedule_slot.history.append(
+                        (
+                            self.schedule_slot.version,
+                            f"round{self._round}: matcha re-fit infeasible "
+                            f"({e}); using the fixed pool",
+                        )
+                    )
+        if best_sched is None:
+            best_sched, scored = design_best_schedule(
+                self.gc,
+                self.tp,
+                n_candidates=self.config.n_candidates,
+                designers=self.config.designers,
+                rng=self._rng,
+                incumbent=self.overlay,
+                rewire_restarts=self.config.rewire_restarts,
+                rewire_steps=self.config.rewire_steps,
+                matcha_budgets=self.config.matcha_budgets,
+                matcha_rounds=self.config.matcha_rounds,
+                matcha_seeds=self.config.matcha_seeds,
+                sample_seed=int(self._rng.integers(1 << 31)),
+            )
+        if isinstance(best_sched, FixedSchedule):
+            best = best_sched.overlay
+            name = best.name
+            predicted = best.cycle_time_ms
+            bottleneck = self._sparse_bottleneck(best.edges)
+            plan = plan_from_overlay(
+                best, len(self.gc.silos), silos=self.gc.silos
+            )
+        else:  # randomized winner: τ̄ of the distribution, not one Karp value
+            best = None
+            name = f"{best_sched.name}@{best_sched.budget:g}"
+            predicted = (
+                sched_tau
+                if sched_tau is not None  # reuse the sweep's estimate
+                else best_sched.price(
+                    self.gc, self.tp, rounds=self.config.matcha_rounds,
+                    seeds=(self.config.matcha_seeds[0],),
+                ).tau_ms
+            )
+            # Explain with the support's circuit: every matching active —
+            # the links the distribution can be throttled by at budget 1.
+            bottleneck = self._sparse_bottleneck(
+                best_sched._arc_pool(self.gc)[0]
+            )
+            plan = None
         elapsed = time.perf_counter() - t0
+        label = f"round{self._round}:{name}"
+        if self.schedule_slot is not None:
+            self.schedule_slot.swap_schedule(best_sched, label=label)
+            if plan is None:
+                plan = self.schedule_slot.plan
         if self.plan_slot is not None:
-            if plan.n_silos == self.plan_slot.plan.n_silos:
-                self.plan_slot.swap(plan, label=f"round{self._round}:{best.name}")
+            if best is None:
+                # The fixed-plan slot cannot follow a plan *distribution*;
+                # callers that want randomized actuation listen on a
+                # ScheduleSlot.  Audit-note it, as for churn below.
+                self.plan_slot.history.append(
+                    (
+                        self.plan_slot.version,
+                        f"{label} NOT swapped (randomized schedule needs "
+                        "a ScheduleSlot)",
+                    )
+                )
+            elif plan.n_silos == self.plan_slot.plan.n_silos:
+                self.plan_slot.swap(plan, label=label)
             else:
                 # Churn changed the silo count but the slot's mesh axis is
                 # sized at launch and cannot follow (ROADMAP follow-up:
@@ -320,13 +531,15 @@ class OnlineTopologyController:
                 self.plan_slot.history.append(
                     (
                         self.plan_slot.version,
-                        f"round{self._round}:{best.name} NOT swapped "
+                        f"{label} NOT swapped "
                         f"({plan.n_silos} != {self.plan_slot.plan.n_silos} silos)",
                     )
                 )
-        self.overlay = best
-        self.plan = plan
-        self.predicted_tau_ms = best.cycle_time_ms
+        if best is not None:
+            self.overlay = best  # randomized winners keep the fixed fallback
+            self.plan = plan
+        self.schedule = best_sched
+        self.predicted_tau_ms = predicted
         self._window.clear()
         self._strikes = 0
         self._rounds_since_swap = 0
@@ -336,11 +549,12 @@ class OnlineTopologyController:
             round_idx=self._round,
             overlay=best,
             plan=plan,
-            predicted_tau_ms=best.cycle_time_ms,
+            predicted_tau_ms=predicted,
             measured_ms=measured,
             n_candidates=scored,
             elapsed_s=elapsed,
             bottleneck=bottleneck,
+            schedule=best_sched,
         )
         self.redesigns.append(redesign)
         return redesign

@@ -358,6 +358,46 @@ def busiest_core_link(
     return max(load, key=lambda k: (load[k], length(k)))
 
 
+def silo_degrade_scenario(
+    underlay: Underlay,
+    comp_time_ms: float,
+    *,
+    silo: int,
+    t_ms: float,
+    factor: float = 0.02,
+    horizon_ms: float = 60_000.0,
+) -> Scenario:
+    """Severely degrade every core link incident to one silo.
+
+    Every path to ``silo`` ends on one of its (all degraded) incident
+    links, so no re-routing escapes the ``M / (factor · C)`` transfer —
+    the drift that stresses *schedules* hardest: a fixed overlay absorbs
+    the slow silo into its critical circuit (amortized over the circuit
+    length by max-plus pipelining), while a randomized plan stalls both
+    endpoints of every sampled matching that touches it.  The online
+    controller must react either way: re-design the overlay around the
+    slow region, or — with ``ControllerConfig.schedule_family="matcha"``
+    — re-fit the plan distribution (budget re-swept on the degraded
+    estimate) and hot-swap it through the :class:`ScheduleSlot`.
+    """
+    if not (0 <= silo < underlay.num_silos):
+        raise ValueError(f"silo {silo} outside universe of {underlay.name}")
+    events = tuple(
+        LinkDegraded(t_ms=t_ms, link=_link_key(e), factor=factor)
+        for e in underlay.core_edges
+        if silo in e
+    )
+    if not events:
+        raise ValueError(f"silo {silo} has no core links in {underlay.name}")
+    return Scenario(
+        name=f"{underlay.name}-silodegrade",
+        underlay=underlay,
+        comp_time_ms=comp_time_ms,
+        events=events,
+        horizon_ms=horizon_ms,
+    )
+
+
 def random_scenario(
     underlay: Underlay,
     comp_time_ms: float,

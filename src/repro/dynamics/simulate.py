@@ -37,7 +37,8 @@ from ..core.maxplus_vec import (
     batched_cycle_time,
     batched_timing_recursion_piecewise,
 )
-from .events import NetworkEpoch, Scenario
+from ..core.schedule import Schedule, ScheduleEstimate
+from .events import NetworkEpoch, Scenario, active_subgraph
 
 Arc = Tuple[int, int]
 
@@ -162,6 +163,32 @@ def simulate_scenarios_batched(
     return batched_timing_recursion_piecewise(Ws_all, starts_all, num_rounds)
 
 
+def schedule_epoch_estimates(
+    scenario: Scenario,
+    tp: TrainingParams,
+    schedule: Schedule,
+    *,
+    rounds: int = 150,
+    seeds: Sequence[int] = (0, 1),
+) -> List[ScheduleEstimate]:
+    """Price a schedule on *every epoch* of a scenario — the average
+    cycle time of a plan distribution per epoch.
+
+    The fixed-overlay analogue is ``DynamicRun.predicted_tau_ms`` (one
+    Karp value per epoch); for a randomized schedule each epoch gets a
+    Monte-Carlo :class:`~repro.core.schedule.ScheduleEstimate` (τ̄ + CI)
+    on that epoch's re-measured, active-silo connectivity graph.  This is
+    what lets the controller reason about a MATCHA schedule under drift:
+    the same distribution prices differently on every network the
+    scenario visits.
+    """
+    out: List[ScheduleEstimate] = []
+    for epoch in scenario.segments():
+        gc = active_subgraph(epoch.gc, epoch.active)
+        out.append(schedule.price(gc, tp, rounds=rounds, seeds=seeds))
+    return out
+
+
 class DynamicTimeline:
     """Round-by-round stepper over a scenario, with a hot-swappable overlay.
 
@@ -182,6 +209,8 @@ class DynamicTimeline:
         self.round_finish_ms: List[float] = [0.0]
         self.overlay_edges: Optional[Tuple[Arc, ...]] = None
         self._Weff: Optional[np.ndarray] = None
+        self._schedule: Optional[Schedule] = None
+        self._sched_cache: dict = {}
 
     @property
     def now_ms(self) -> float:
@@ -192,6 +221,7 @@ class DynamicTimeline:
         return len(self.round_finish_ms) - 1
 
     def set_overlay(self, overlay_edges: Sequence[Arc]) -> None:
+        self._schedule = None
         self.overlay_edges = tuple(overlay_edges)
         Ws = np.stack(
             [_epoch_matrix(e, self.tp, self.overlay_edges) for e in self.epochs]
@@ -201,6 +231,45 @@ class DynamicTimeline:
         Ws[:, idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
         self._Weff = Ws
 
+    def set_schedule(self, schedule: Schedule) -> None:
+        """Install a :class:`~repro.core.schedule.Schedule` as the plant's
+        communication topology.
+
+        A deterministic schedule takes the precomputed per-epoch fast
+        path of :meth:`set_overlay`; a randomized one samples its overlay
+        per round from the shared round counter (``round_edges(k)`` with
+        ``k = rounds_done``), pricing the sampled arcs on whichever epoch
+        each sender currently sits in — delay matrices are cached per
+        (sampled edge set, epoch).
+        """
+        if not schedule.is_randomized:
+            self.set_overlay(schedule.round_edges(0))
+            self._schedule = schedule
+            return
+        self.overlay_edges = None
+        self._Weff = None
+        self._schedule = schedule
+        self._sched_cache.clear()
+
+    @property
+    def schedule(self) -> Optional[Schedule]:
+        return self._schedule
+
+    _SCHED_CACHE_MAX = 512  # FIFO bound: many-matching schedules rarely repeat
+
+    def _epoch_matrix_cached(self, edges: Tuple[Arc, ...], ei: int) -> np.ndarray:
+        key = (edges, ei)
+        W = self._sched_cache.get(key)
+        if W is None:
+            W = _epoch_matrix(self.epochs[ei], self.tp, edges)
+            idx = np.arange(W.shape[-1])
+            diag = W[idx, idx]
+            W[idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
+            if len(self._sched_cache) >= self._SCHED_CACHE_MAX:
+                self._sched_cache.pop(next(iter(self._sched_cache)))
+            self._sched_cache[key] = W
+        return W
+
     def current_epoch(self) -> NetworkEpoch:
         """Epoch containing the current round front — what a measurement
         service would report if probed right now."""
@@ -209,10 +278,19 @@ class DynamicTimeline:
 
     def step(self) -> float:
         """Advance one communication round; return its realized duration."""
-        if self._Weff is None:
-            raise RuntimeError("set_overlay() before stepping")
+        if self._Weff is None and (
+            self._schedule is None or not self._schedule.is_randomized
+        ):
+            raise RuntimeError("set_overlay()/set_schedule() before stepping")
         e = _epoch_of(self.starts, self.t)  # [N] epoch per sender
-        Wk = self._Weff[e, np.arange(len(self.t)), :]
+        if self._Weff is not None:
+            Wk = self._Weff[e, np.arange(len(self.t)), :]
+        else:
+            edges = tuple(self._schedule.round_edges(self.rounds_done))
+            Wk = np.empty((len(self.t), len(self.t)))
+            for ei in np.unique(e):
+                rows = e == ei
+                Wk[rows] = self._epoch_matrix_cached(edges, int(ei))[rows]
         self.t = np.max(self.t[:, None] + Wk, axis=0)
         finish = float(self.t.max())
         duration = finish - self.round_finish_ms[-1]

@@ -5,6 +5,10 @@ Public surface:
 * :class:`~repro.fed.gossip.GossipPlan` / :class:`~repro.fed.gossip.PlanSlot`
   — a consensus matrix compiled into a ppermute schedule, and the
   versioned hot-swap hook the online controller actuates through;
+* :class:`~repro.fed.gossip.ScheduleSlot` — the schedule-valued slot for
+  randomized plans: samples one :class:`~repro.fed.gossip.GossipPlan`
+  per communication round from a shared round counter (every silo
+  derives the identical plan with no coordination);
 * :func:`~repro.fed.gossip.gossip_einsum` /
   :func:`~repro.fed.gossip.gossip_shard_map` /
   :func:`~repro.fed.gossip.collective_bytes_per_round` — the gossip
@@ -21,6 +25,7 @@ Public surface:
 from .gossip import (
     GossipPlan,
     PlanSlot,
+    ScheduleSlot,
     collective_bytes_per_round,
     gossip_einsum,
     gossip_shard_map,

@@ -120,17 +120,32 @@ def make_train_step(
     plan: Optional[GossipPlan],
     mesh: Optional[jax.sharding.Mesh] = None,
     grad_pspecs=None,
+    *,
+    consensus_arg: bool = False,
 ) -> Callable:
     """Build the jittable DPASGD train step.
 
     state  = {"params", "opt_state", "step"}; when n_silos > 1 every leaf
     has a leading silo dimension.
     batch  = {"tokens": [n_silos?, s, B, S], "labels": ...}
+
+    With ``consensus_arg=True`` the step takes the consensus matrix as a
+    *traced* third argument — ``step_fn(state, batch, A)`` — and mixes
+    via :func:`gossip_einsum`.  That is the lowering for randomized
+    schedules (:class:`~repro.fed.gossip.ScheduleSlot`): the sampled
+    topology changes every round, so it must be data, not a baked
+    constant, or every round would recompile.  ``plan`` is ignored then.
     """
     loss_fn = make_loss_fn(cfg)
     n_silos = cfg.n_silos
+    if consensus_arg and fed.gossip_impl not in ("einsum", "none"):
+        raise ValueError(
+            "consensus_arg=True lowers gossip as a traced einsum; "
+            f"gossip_impl={fed.gossip_impl!r} bakes the plan into the "
+            "step and cannot follow a per-round matrix"
+        )
 
-    def step_fn(state, batch):
+    def step_fn(state, batch, consensus=None):
         params, opt_state, step = state["params"], state["opt_state"], state["step"]
         if n_silos == 1:
             params, opt_state, step, loss = local_sgd_steps(
@@ -150,7 +165,9 @@ def make_train_step(
             params, opt_state, losses = vm(params, opt_state, batch)
             loss = losses.mean()
             # consensus mix (the paper's technique)
-            if fed.gossip_impl == "einsum":
+            if consensus_arg and fed.gossip_impl != "none":
+                params = gossip_einsum(params, jnp.asarray(consensus))
+            elif fed.gossip_impl == "einsum":
                 params = gossip_einsum(params, jnp.asarray(plan.matrix))
             elif fed.gossip_impl in ("ppermute", "pallas"):
                 assert mesh is not None and fed.silo_axis is not None

@@ -124,6 +124,82 @@ class PlanSlot:
         return self.version
 
 
+class ScheduleSlot(PlanSlot):
+    """Hot-swap slot for *schedule*-valued state (randomized plans).
+
+    Extends :class:`PlanSlot` from one fixed :class:`GossipPlan` to a
+    :class:`repro.core.schedule.Schedule`: every communication round the
+    active schedule samples that round's overlay
+    (``schedule.round_edges(k)``) and the slot materializes it as a
+    consensus matrix / :class:`GossipPlan`.  Because ``round_edges`` is a
+    pure function of (schedule state, round counter), **every silo
+    holding an equal slot derives the identical plan for round k from the
+    shared round counter alone** — no cross-silo coordination, the
+    property MATCHA deployments rely on (Appendix G.3) and that
+    ``tests/test_schedule.py`` pins down.
+
+    Plans are cached per sampled edge set, bounded FIFO at
+    ``max_cached_plans`` (a MATCHA schedule over few matchings revisits a
+    small subset family; over many matchings almost every round is fresh
+    and an unbounded cache would grow for the process lifetime), and
+    ``version`` moves only on :meth:`swap_schedule` — per-round sampling
+    is expected churn, not a topology change.  For a deterministic
+    :class:`FixedSchedule` the slot degenerates to a :class:`PlanSlot`
+    whose plan never varies.
+    """
+
+    def __init__(self, schedule, n_silos: int, silos: Optional[Sequence] = None,
+                 max_cached_plans: int = 512):
+        from repro.core.consensus import local_degree_matrix
+
+        self._local_degree_matrix = local_degree_matrix
+        self._n = int(n_silos)
+        self._silos = tuple(silos) if silos is not None else None
+        self._schedule = schedule
+        self._plan_cache: dict = {}
+        self._max_cached = int(max_cached_plans)
+        super().__init__(self.plan_for_round(0))
+
+    @property
+    def schedule(self):
+        return self._schedule
+
+    def swap_schedule(self, schedule, label: str = "") -> int:
+        """Install a new schedule (fixed or randomized); bumps ``version``
+        and fires the ``on_swap`` callbacks with the round-0 plan."""
+        self._schedule = schedule
+        self._plan_cache.clear()
+        return self.swap(self.plan_for_round(0), label=label)
+
+    def _index(self, label) -> int:
+        if self._silos is not None:
+            return self._silos.index(label)
+        return int(label)
+
+    def plan_for_round(self, round_idx: int) -> GossipPlan:
+        """The (deterministic) gossip plan of communication round
+        ``round_idx`` under the active schedule."""
+        edges = self._schedule.round_edges(round_idx)
+        idx_edges = tuple(
+            sorted(
+                (self._index(i), self._index(j)) for (i, j) in edges if i != j
+            )
+        )
+        plan = self._plan_cache.get(idx_edges)
+        if plan is None:
+            A = self._local_degree_matrix(self._n, list(idx_edges))
+            plan = GossipPlan.from_matrix(A)
+            if len(self._plan_cache) >= self._max_cached:  # FIFO bound
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+            self._plan_cache[idx_edges] = plan
+        return plan
+
+    def matrix_for_round(self, round_idx: int) -> np.ndarray:
+        """Consensus matrix of round ``round_idx`` — the array fed to a
+        traced-consensus train step (no re-lowering between rounds)."""
+        return self.plan_for_round(round_idx).matrix
+
+
 def gossip_einsum(params: Any, A: jax.Array) -> Any:
     """Reference gossip: dense mixing over the leading silo dimension.
 

@@ -16,6 +16,18 @@ hot-swaps the gossip plan — the train step is re-lowered on the new plan:
 
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --dynamic --underlay gaia --scenario linkfail --steps 60
+
+``--designer matcha`` trains on a *randomized* schedule (MATCHA-style
+budgeted matching activation): every step samples that round's gossip
+plan from a shared round counter through a ``ScheduleSlot``, and the
+consensus matrix enters the jitted step as a traced argument — per-round
+topologies never recompile.  Works standalone (homogeneous MATCHA over
+the complete silo graph) and under ``--dynamic``, where the initial
+budget is swept on the measured underlay and the controller re-fits the
+distribution on drift (``--scenario silodegrade`` stresses exactly that):
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --dynamic --designer matcha --scenario silodegrade
 """
 
 from __future__ import annotations
@@ -46,16 +58,22 @@ def main() -> int:
                     help="simulate a time-varying WAN and run the online "
                          "topology controller (silo count follows the underlay)")
     ap.add_argument("--designer", default="auto",
-                    choices=["auto", "sparse-rewire"],
-                    help="overlay designer for --dynamic: 'sparse-rewire' "
-                         "designs the initial overlay with the jitted "
-                         "rewire search and keeps it in the controller's "
-                         "re-design pool (default: --topology heuristic, "
-                         "rewire search still in the pool)")
+                    choices=["auto", "sparse-rewire", "matcha"],
+                    help="overlay designer: 'sparse-rewire' designs the "
+                         "initial overlay with the jitted rewire search "
+                         "(needs --dynamic) and keeps it in the "
+                         "controller's re-design pool; 'matcha' trains on "
+                         "a randomized schedule (per-round sampled gossip "
+                         "plans; with --dynamic the budget is swept on "
+                         "the measured underlay and re-fit on drift); "
+                         "default: --topology heuristic")
+    ap.add_argument("--matcha-budget", type=float, default=0.5,
+                    help="static-mode MATCHA activation probability C_b "
+                         "(with --dynamic the budget comes from the sweep)")
     ap.add_argument("--underlay", default="gaia")
     ap.add_argument("--workload", default="inaturalist")
     ap.add_argument("--scenario", default="linkfail",
-                    choices=["linkfail", "random", "static"])
+                    choices=["linkfail", "silodegrade", "random", "static"])
     ap.add_argument("--scenario-seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -91,21 +109,31 @@ def main() -> int:
     n = args.silos
     mesh = compat_make_mesh((n,), ("data",))
     opt = momentum(args.lr, 0.9)
+    # Randomized schedules sample a fresh topology per round, so their
+    # consensus matrix must be a *traced* step input (einsum lowering) —
+    # the baked ppermute/pallas schedules would recompile every round.
+    sched_mode = args.designer == "matcha" and n > 1 and \
+        args.gossip_impl != "none"
+    if sched_mode and args.gossip_impl not in ("einsum",):
+        print(f"note: --designer matcha lowers gossip as a traced einsum; "
+              f"overriding --gossip-impl {args.gossip_impl}")
     fed = DPASGDConfig(local_steps=args.local_steps,
-                       gossip_impl=args.gossip_impl if n > 1 else "none",
+                       gossip_impl=("einsum" if sched_mode else
+                                    args.gossip_impl) if n > 1 else "none",
                        silo_axis="data")
 
-    timeline = controller = slot = None
+    timeline = controller = slot = sched_slot = None
     if args.dynamic:
         from repro.core import (
-            OVERLAY_KINDS, TrainingParams, WORKLOADS, design_overlay,
+            DEFAULT_MATCHA_BUDGETS, OVERLAY_KINDS, TrainingParams, WORKLOADS,
+            design_overlay, design_schedule,
         )
         from repro.dynamics import (
             ControllerConfig, DynamicTimeline, OnlineTopologyController,
             active_subgraph, link_failure_scenario, random_scenario,
-            static_scenario,
+            silo_degrade_scenario, static_scenario,
         )
-        from repro.fed.gossip import PlanSlot
+        from repro.fed.gossip import PlanSlot, ScheduleSlot
 
         M, Tc = WORKLOADS[args.workload]
         tp = TrainingParams(model_size_mbits=M, local_steps=args.local_steps)
@@ -115,13 +143,28 @@ def main() -> int:
         else:
             kind = args.topology if args.topology in OVERLAY_KINDS else "ring"
         overlay = design_overlay(kind, gc0, tp)
-        print(f"dynamic: {args.underlay} N={n}, {kind} overlay, "
-              f"predicted tau={overlay.cycle_time_ms:.1f} ms")
-        horizon = overlay.cycle_time_ms * max(args.steps, 1)
+        schedule = None
+        if args.designer == "matcha":
+            schedule = design_schedule(
+                "matcha", gc0, tp, sample_seed=args.scenario_seed)
+            tau0 = schedule.price(gc0, tp, rounds=150, seeds=(0,)).tau_ms
+            print(f"dynamic: {args.underlay} N={n}, matcha schedule "
+                  f"(budget sweep -> C_b={schedule.budget:g}, "
+                  f"{schedule.num_matchings} matchings), "
+                  f"predicted tau={tau0:.1f} ms")
+        else:
+            tau0 = overlay.cycle_time_ms
+            print(f"dynamic: {args.underlay} N={n}, {kind} overlay, "
+                  f"predicted tau={tau0:.1f} ms")
+        horizon = tau0 * max(args.steps, 1)
         if args.scenario == "linkfail":
             scenario = link_failure_scenario(
                 underlay, Tc, t_fail_ms=horizon / 3,
                 overlay_edges=overlay.edges, horizon_ms=horizon)
+        elif args.scenario == "silodegrade":
+            scenario = silo_degrade_scenario(
+                underlay, Tc, silo=underlay.load_centrality_center(),
+                t_ms=horizon / 3, horizon_ms=horizon)
         elif args.scenario == "random":
             # churn disabled: the mesh axis (and the silo-stacked state)
             # is sized once at launch and cannot shrink mid-run
@@ -131,16 +174,26 @@ def main() -> int:
         else:
             scenario = static_scenario(underlay, Tc, horizon_ms=horizon)
         timeline = DynamicTimeline(scenario, tp)
-        timeline.set_overlay(overlay.edges)
-        slot = PlanSlot(plan_from_overlay(overlay, n))
+        provider = lambda: active_subgraph(  # noqa: E731 — shared by both modes
+            timeline.current_epoch().gc, timeline.current_epoch().active)
+        if schedule is not None:
+            timeline.set_schedule(schedule)
+            sched_slot = ScheduleSlot(schedule, n)
+            cfg_ctl = ControllerConfig(
+                seed=args.scenario_seed, schedule_family="matcha",
+                matcha_budgets=DEFAULT_MATCHA_BUDGETS)
+            slot_kw = dict(schedule_slot=sched_slot)
+            plan = None
+        else:
+            timeline.set_overlay(overlay.edges)
+            slot = PlanSlot(plan_from_overlay(overlay, n))
+            cfg_ctl = ControllerConfig(seed=args.scenario_seed)
+            slot_kw = dict(plan_slot=slot)
+            plan = slot.plan
         controller = OnlineTopologyController(
-            gc0, tp, overlay,
-            config=ControllerConfig(seed=args.scenario_seed),
-            connectivity_provider=lambda: active_subgraph(
-                timeline.current_epoch().gc, timeline.current_epoch().active),
-            plan_slot=slot,
+            gc0, tp, overlay, schedule=schedule, config=cfg_ctl,
+            connectivity_provider=provider, **slot_kw,
         )
-        plan = slot.plan
     else:
         # Without --dynamic there are no network measurements to design
         # from; the measurement-based kinds fall back to their homogeneous
@@ -148,14 +201,34 @@ def main() -> int:
         if args.designer == "sparse-rewire":
             print("note: --designer sparse-rewire needs --dynamic "
                   "(network measurements); ignoring")
-        kind = {"delta_mbst": "mst", "ring_2opt": "ring"}.get(
-            args.topology, args.topology)
-        if kind != args.topology:
-            print(f"note: --topology {args.topology} needs --dynamic "
-                  f"(network measurements); using homogeneous '{kind}' plan")
-        plan = plan_for_n_silos(kind, n) if n > 1 else None
+        plan = None
+        if args.designer == "matcha" and n > 1:
+            # Homogeneous MATCHA: matchings of the complete silo graph.
+            from repro.core import MatchaSchedule, greedy_edge_coloring
+            from repro.fed.gossip import ScheduleSlot
 
-    step_fn = make_train_step(cfg, fed, opt, plan, mesh)
+            pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+            schedule = MatchaSchedule(
+                matchings=tuple(
+                    tuple(m) for m in greedy_edge_coloring(pairs)),
+                budget=args.matcha_budget,
+                sample_seed=args.scenario_seed,
+            )
+            sched_slot = ScheduleSlot(schedule, n)
+            print(f"matcha: homogeneous K_{n} base graph, "
+                  f"{schedule.num_matchings} matchings, "
+                  f"C_b={schedule.budget:g} (per-round sampled plans)")
+        else:
+            kind = {"delta_mbst": "mst", "ring_2opt": "ring"}.get(
+                args.topology, args.topology)
+            if kind != args.topology:
+                print(f"note: --topology {args.topology} needs --dynamic "
+                      f"(network measurements); using homogeneous "
+                      f"'{kind}' plan")
+            plan = plan_for_n_silos(kind, n) if n > 1 else None
+
+    step_fn = make_train_step(cfg, fed, opt, plan, mesh,
+                              consensus_arg=sched_mode)
     state = init_state(cfg, opt, jax.random.PRNGKey(0))
     if n > 1:
         def put(x):
@@ -173,33 +246,51 @@ def main() -> int:
     with mesh_context(mesh):
         for i in range(args.steps):
             b = {k: jnp.asarray(v) for k, v in batcher.batch(i).items()}
-            state, metrics = jstep(state, b)
+            if sched_mode:
+                # per-round sampled consensus: traced argument, same
+                # compiled step for every sampled topology
+                A = jnp.asarray(sched_slot.matrix_for_round(i))
+                state, metrics = jstep(state, b, A)
+            else:
+                state, metrics = jstep(state, b)
             if args.dynamic:
                 # one train step == one communication round of simulated WAN
                 duration = timeline.step()
                 redesign = controller.observe_round(duration)
                 if redesign is not None:
-                    timeline.set_overlay(redesign.overlay.edges)
+                    timeline.set_schedule(redesign.schedule)
+                    name = (redesign.overlay.name if redesign.overlay
+                            else redesign.schedule.name)
+                    rand = ("randomized schedule"
+                            if redesign.schedule.is_randomized else "overlay")
                     print(f"step {i:4d} [t={timeline.now_ms/1e3:7.1f}s sim] "
-                          f"controller re-design: {redesign.overlay.name} "
+                          f"controller re-design -> {rand} {name} "
                           f"tau {redesign.measured_ms:.1f} -> "
                           f"{redesign.predicted_tau_ms:.1f} ms "
                           f"({redesign.n_candidates} candidates in "
                           f"{redesign.elapsed_s*1e3:.0f} ms), bottleneck "
                           f"{redesign.bottleneck}", flush=True)
-                if slot.version != built_version:
+                if slot is not None and slot.version != built_version:
                     # hot-swap: re-lower the train step on the new plan
                     jstep = jax.jit(make_train_step(cfg, fed, opt, slot.plan,
                                                     mesh))
                     built_version = slot.version
+                # sched_slot swaps need no re-lowering: the consensus
+                # matrix is a traced input, matrix_for_round follows the
+                # new schedule automatically
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                       f"({time.time()-t0:.1f}s)", flush=True)
     if args.dynamic and controller is not None:
+        final = controller.schedule
+        desc = (f"randomized schedule {final.name} (C_b="
+                f"{getattr(final, 'budget', 0):g})"
+                if final.is_randomized
+                else f"overlay {controller.overlay.name}")
         print(f"dynamic summary: {timeline.rounds_done} rounds in "
               f"{timeline.now_ms/1e3:.1f}s simulated, "
-              f"{len(controller.redesigns)} re-design(s), final overlay "
-              f"{controller.overlay.name} (tau {controller.predicted_tau_ms:.1f} ms)")
+              f"{len(controller.redesigns)} re-design(s), final {desc} "
+              f"(tau {controller.predicted_tau_ms:.1f} ms)")
     if args.checkpoint:
         from repro.checkpoint import save_checkpoint
 

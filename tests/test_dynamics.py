@@ -43,13 +43,16 @@ from repro.dynamics import (
     SiloLeave,
     active_subgraph,
     design_best_overlay,
+    design_best_schedule,
     link_failure_scenario,
     random_scenario,
+    schedule_epoch_estimates,
+    silo_degrade_scenario,
     simulate_dynamic,
     simulate_scenarios_batched,
     static_scenario,
 )
-from repro.fed.gossip import PlanSlot
+from repro.fed.gossip import PlanSlot, ScheduleSlot
 
 
 def gaia_setup(workload="inaturalist", s=1):
@@ -353,6 +356,120 @@ def test_plan_slot_swap_contract():
 
     with pytest.raises(ValueError):  # silo-count mismatch is rejected
         slot.swap(GossipPlan.from_matrix(np.eye(3)))
+
+
+# ---------------------------------------------------------------------------
+# Randomized schedules under dynamics
+
+
+def test_schedule_epoch_estimates_track_the_drift():
+    """Per-epoch pricing of a plan distribution: the degraded epoch's τ̄
+    must exceed the healthy epoch's (the ROADMAP 'average cycle time of a
+    plan distribution per epoch' item)."""
+    u, gc, tp, Tc = gaia_setup()
+    ms = C.matcha_schedule_from_underlay(u, 0.3)
+    sc = silo_degrade_scenario(u, Tc, silo=3, t_ms=5000.0, factor=0.02)
+    ests = schedule_epoch_estimates(sc, tp, ms, rounds=50, seeds=(0, 1))
+    assert len(ests) == 2
+    assert all(np.isfinite(e.tau_ms) for e in ests)
+    assert ests[1].tau_ms > 2.0 * ests[0].tau_ms
+
+
+def test_design_best_schedule_defaults_to_fixed_pool():
+    u, gc, tp, Tc = gaia_setup()
+    sched, scored = design_best_schedule(gc, tp, n_candidates=32,
+                                         rewire_restarts=0)
+    assert not sched.is_randomized
+    best_overlay, _ = design_best_overlay(gc, tp, n_candidates=32,
+                                          rng=np.random.default_rng(0))
+    # same candidate families -> same winner class of cycle times
+    assert sched.price(gc, tp).tau_ms <= best_overlay.cycle_time_ms * 1.05
+
+
+def test_dynamic_timeline_steps_a_randomized_schedule():
+    u, gc, tp, Tc = gaia_setup()
+    ms = C.matcha_schedule_from_underlay(u, 0.4, sample_seed=2)
+    sc = static_scenario(u, Tc)
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_schedule(ms)
+    durations = [timeline.step() for _ in range(30)]
+    assert all(d > 0 for d in durations)
+    # round k's realized duration is reproducible from the shared counter
+    timeline2 = DynamicTimeline(sc, tp)
+    timeline2.set_schedule(C.matcha_schedule_from_underlay(u, 0.4,
+                                                           sample_seed=2))
+    assert durations == [timeline2.step() for _ in range(30)]
+
+
+def test_controller_hot_swaps_to_randomized_schedule():
+    """Acceptance: under schedule_family='matcha' a regression re-design
+    re-fits the plan distribution and hot-swaps the ScheduleSlot from a
+    fixed overlay to a randomized schedule."""
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = silo_degrade_scenario(
+        u, Tc, silo=3, t_ms=30 * ring.cycle_time_ms, factor=0.02,
+        horizon_ms=300 * ring.cycle_time_ms,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    slot = ScheduleSlot(C.FixedSchedule(ring), gc.num_silos, silos=gc.silos)
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        config=ControllerConfig(
+            seed=0, schedule_family="matcha",
+            matcha_budgets=(0.1, 0.2, 0.3, 0.5),
+            matcha_rounds=80, matcha_seeds=(0, 1), rewire_restarts=0,
+        ),
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+        schedule_slot=slot,
+    )
+    for _ in range(100):
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_schedule(redesign.schedule)
+    assert len(controller.redesigns) >= 1
+    rd = controller.redesigns[0]
+    assert rd.schedule is not None and rd.schedule.is_randomized
+    assert rd.overlay is None  # randomized winner carries no single overlay
+    assert np.isfinite(rd.predicted_tau_ms) and rd.predicted_tau_ms > 0
+    # the slot followed: init swap + redesign swap, now randomized
+    assert slot.version >= 2 and slot.schedule.is_randomized
+    # per-round plans keep flowing from the shared counter after the swap
+    A = slot.matrix_for_round(timeline.rounds_done)
+    assert np.allclose(A.sum(axis=0), 1.0) and np.allclose(A.sum(axis=1), 1.0)
+    # the plant keeps stepping on the sampled topologies
+    assert timeline.step() > 0
+
+
+def test_train_dynamic_matcha_completes_hot_swap():
+    """Acceptance: ``train.py --dynamic --designer matcha`` completes a
+    controller hot-swap to a randomized schedule (traced-consensus step,
+    no per-round re-lowering)."""
+    import os
+    import subprocess
+    import sys
+
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "internlm2-1.8b", "--reduced", "--dynamic",
+            "--designer", "matcha", "--scenario", "silodegrade",
+            "--steps", "30", "--seq-len", "16", "--batch-per-silo", "2",
+        ],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env=env,
+    )
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-2000:]
+    assert "matcha schedule" in out  # initial budget-swept design
+    assert "controller re-design -> randomized schedule" in out, out[-2000:]
+    assert "final randomized schedule" in out
 
 
 # ---------------------------------------------------------------------------

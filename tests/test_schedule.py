@@ -1,0 +1,400 @@
+"""Schedule subsystem: randomized plan distributions as first-class
+citizens of the batched engines.
+
+Key identities under test:
+
+* the vectorized ``MatchaSchedule`` τ̄ reproduces the legacy scalar
+  ``Matcha.average_cycle_time`` oracle on equal seeds (the acceptance
+  identity — the masks consume the same ``random.Random`` stream and the
+  pricing/recursion are the same f64 operations);
+* the budgets × seeds batched sweep equals per-schedule pricing;
+* ``round_edges`` is a pure function of (schedule, round counter), so
+  silos sharing the counter derive identical per-round gossip plans with
+  no coordination (``ScheduleSlot`` cross-silo determinism);
+* the unique-rounds / time-varying edge-list recursion agrees with
+  per-round dense recursion steps, and its JAX twin with numpy;
+* ``critical_circuit_sparse`` agrees with the dense extractor oracle;
+* budget validation kills the ``budget <= 0`` infinite resample loop at
+  construction (legacy ``Matcha`` and ``MatchaSchedule`` alike).
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.delays import TrainingParams, overlay_delay_matrix
+from repro.core.matcha import Matcha, greedy_edge_coloring
+from repro.core.maxplus_sparse import (
+    batched_overlay_delay_edges,
+    critical_circuit_sparse,
+    dense_to_edge_batch,
+    timing_recursion_time_varying_sparse,
+    timing_recursion_time_varying_sparse_jax,
+    timing_recursion_unique_rounds_sparse,
+)
+from repro.core.maxplus_vec import (
+    NEG_INF,
+    batched_timing_recursion,
+    critical_circuit_dense,
+    timing_recursion_dense,
+)
+from repro.core.schedule import (
+    FixedSchedule,
+    MatchaSchedule,
+    average_cycle_times_batched,
+    design_matcha_schedule,
+)
+from repro.fed.gossip import ScheduleSlot
+
+
+def gaia_setup(s=1):
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=s)
+    return u, gc, tp
+
+
+# ---------------------------------------------------------------------------
+# Budget validation (the sample_round infinite-loop fix)
+
+
+@pytest.mark.parametrize("budget", [0.0, -0.5, 1.5, 2])
+def test_budget_outside_unit_interval_rejected_at_construction(budget):
+    with pytest.raises(ValueError, match="budget"):
+        Matcha(matchings=[[(0, 1)]], budget=budget)
+    with pytest.raises(ValueError, match="budget"):
+        MatchaSchedule(matchings=(((0, 1),),), budget=budget)
+
+
+def test_budget_one_is_valid_and_always_activates_everything():
+    m = Matcha(matchings=[[(0, 1)], [(2, 3)]], budget=1.0)
+    assert sorted(m.sample_round(random.Random(0))) == [(0, 1), (2, 3)]
+    s = MatchaSchedule(matchings=(((0, 1),), ((2, 3),)), budget=1.0)
+    assert s.round_active(17) == (0, 1)
+
+
+def test_empty_matchings_rejected():
+    with pytest.raises(ValueError, match="matching"):
+        MatchaSchedule(matchings=(), budget=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: seeded vectorized tau-bar == legacy scalar oracle
+
+
+@pytest.mark.parametrize("network", ["gaia", "aws_na"])
+@pytest.mark.parametrize("budget", [0.1, 0.5, 1.0])
+def test_vectorized_tau_matches_legacy_oracle(network, budget):
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay(network)
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=1)
+    for seed in (0, 7):
+        legacy = C.matcha_plus_from_underlay(u, budget).average_cycle_time(
+            gc, tp, rounds=80, seed=seed
+        )
+        est = C.matcha_schedule_from_underlay(u, budget).price(
+            gc, tp, rounds=80, seeds=(seed,)
+        )
+        assert est.tau_ms == pytest.approx(legacy, rel=1e-6)
+
+
+def test_connectivity_schedule_matches_legacy_oracle_with_local_steps():
+    u, gc, tp = gaia_setup(s=3)
+    legacy = C.matcha_from_connectivity(gc, 0.4).average_cycle_time(
+        gc, tp, rounds=60, seed=5
+    )
+    est = C.matcha_schedule_from_connectivity(gc, 0.4).price(
+        gc, tp, rounds=60, seeds=(5,)
+    )
+    assert est.tau_ms == pytest.approx(legacy, rel=1e-6)
+
+
+def test_batched_sweep_equals_per_schedule_pricing():
+    u, gc, tp = gaia_setup()
+    budgets = (0.2, 0.6, 1.0)
+    seeds = (0, 1)
+    scheds = [C.matcha_schedule_from_underlay(u, b) for b in budgets]
+    grid = average_cycle_times_batched(scheds, gc, tp, rounds=50, seeds=seeds)
+    assert grid.shape == (3, 2)
+    for i, s in enumerate(scheds):
+        for j, seed in enumerate(seeds):
+            solo = s.price(gc, tp, rounds=50, seeds=(seed,))
+            assert grid[i, j] == pytest.approx(solo.tau_ms, rel=1e-12)
+
+
+def test_schedule_estimate_confidence_interval():
+    u, gc, tp = gaia_setup()
+    s = C.matcha_schedule_from_underlay(u, 0.3)
+    est = s.price(gc, tp, rounds=60, seeds=(0, 1, 2, 3))
+    assert len(est.per_seed_ms) == 4
+    assert est.tau_ms == pytest.approx(np.mean(est.per_seed_ms))
+    assert est.ci95_ms > 0
+    single = s.price(gc, tp, rounds=60, seeds=(0,))
+    assert single.ci95_ms == 0.0
+
+
+def test_budget_sweep_picks_the_smallest_mean_tau():
+    u, gc, tp = gaia_setup()
+    budgets = (0.2, 0.5, 1.0)
+    best, est = design_matcha_schedule(
+        gc, tp, budgets=budgets, rounds=60, seeds=(0, 1)
+    )
+    scheds = [
+        MatchaSchedule(matchings=best.matchings, budget=b) for b in budgets
+    ]
+    grid = average_cycle_times_batched(scheds, gc, tp, rounds=60, seeds=(0, 1))
+    means = grid.mean(axis=1)
+    assert best.budget == budgets[int(np.argmin(means))]
+    assert est.tau_ms == pytest.approx(means.min())
+
+
+# ---------------------------------------------------------------------------
+# FixedSchedule degenerate case
+
+
+def test_fixed_schedule_prices_exactly_and_never_varies():
+    u, gc, tp = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    fs = FixedSchedule(ring)
+    assert not fs.is_randomized and fs.name == "ring"
+    est = fs.price(gc, tp)
+    assert est.tau_ms == pytest.approx(ring.cycle_time_ms) and est.ci95_ms == 0
+    assert fs.round_edges(0) == ring.edges == fs.round_edges(123)
+    W = overlay_delay_matrix(gc, tp, ring.edges)
+    ref = np.diff(timing_recursion_dense(W, 40).max(axis=1))
+    np.testing.assert_allclose(fs.simulate_rounds(gc, tp, 40), ref, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Round-counter sampling determinism (the cross-silo contract)
+
+
+def test_round_edges_deterministic_across_instances_and_varying():
+    u, gc, tp = gaia_setup()
+    a = C.matcha_schedule_from_underlay(u, 0.4, sample_seed=9)
+    b = C.matcha_schedule_from_underlay(u, 0.4, sample_seed=9)
+    assert all(a.round_edges(k) == b.round_edges(k) for k in range(40))
+    assert any(a.round_edges(k) != a.round_edges(k + 1) for k in range(20))
+    c = C.matcha_schedule_from_underlay(u, 0.4, sample_seed=10)
+    assert any(a.round_edges(k) != c.round_edges(k) for k in range(20))
+    # every sampled round is nonempty (Appendix G.3 resampling)
+    assert all(len(a.round_edges(k)) > 0 for k in range(40))
+
+
+def test_schedule_slot_cross_silo_determinism():
+    u, gc, tp = gaia_setup()
+    mk = lambda: ScheduleSlot(
+        C.matcha_schedule_from_underlay(u, 0.4, sample_seed=3), gc.num_silos
+    )
+    silo_a, silo_b = mk(), mk()  # two silos, no shared state
+    for k in (0, 1, 2, 9, 33):
+        A = silo_a.matrix_for_round(k)
+        assert np.array_equal(A, silo_b.matrix_for_round(k))
+        assert np.allclose(A.sum(axis=0), 1.0)
+        assert np.allclose(A.sum(axis=1), 1.0)
+        pa, pb = silo_a.plan_for_round(k), silo_b.plan_for_round(k)
+        assert pa.terms == pb.terms
+
+
+def test_schedule_slot_swap_contract():
+    u, gc, tp = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    slot = ScheduleSlot(FixedSchedule(ring), gc.num_silos, silos=gc.silos)
+    assert slot.version == 0
+    assert slot.plan_for_round(0) is slot.plan_for_round(5)  # cached constant
+    seen = []
+    slot.on_swap(lambda plan, version: seen.append(version))
+    ms = C.matcha_schedule_from_underlay(u, 0.5)
+    v = slot.swap_schedule(ms, label="to-matcha")
+    assert v == 1 and seen == [1] and slot.schedule is ms
+    assert slot.history[-1] == (1, "to-matcha")
+    # per-round sampling does NOT bump the version
+    slot.plan_for_round(3)
+    assert slot.version == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine: round-varying recursion + sparse critical circuit vs oracles
+
+
+def test_time_varying_recursion_matches_per_round_dense_steps():
+    rng = np.random.default_rng(0)
+    for _ in range(15):
+        N = int(rng.integers(2, 8))
+        Cc = int(rng.integers(1, 4))
+        R = int(rng.integers(1, 10))
+        E = int(rng.integers(1, 14))
+        src = rng.integers(0, N, E)
+        dst = rng.integers(0, N, E)
+        w = np.where(
+            rng.random((Cc, R, E)) < 0.7,
+            rng.uniform(0.1, 10.0, (Cc, R, E)),
+            -np.inf,
+        )
+        out = timing_recursion_time_varying_sparse(src, dst, w, N)
+        assert out.shape == (Cc, R + 1, N)
+        for c in range(Cc):
+            t = np.zeros(N)
+            for k in range(R):
+                W = np.full((N, N), -np.inf)
+                np.maximum.at(W, (src, dst), w[c, k])
+                t = batched_timing_recursion(W[None], 1, t[None])[0, 1]
+                assert np.array_equal(out[c, k + 1], t)
+
+
+def test_unique_rounds_recursion_equals_dense_stack_form():
+    rng = np.random.default_rng(1)
+    N, Cc, R, E, U = 6, 3, 12, 10, 5
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    w_unique = np.where(
+        rng.random((U, E)) < 0.8, rng.uniform(0.1, 10.0, (U, E)), -np.inf
+    )
+    ids = rng.integers(0, U, (Cc, R))
+    a = timing_recursion_unique_rounds_sparse(src, dst, w_unique, ids, N)
+    b = timing_recursion_time_varying_sparse(src, dst, w_unique[ids], N)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_time_varying_recursion_jax_matches_numpy():
+    rng = np.random.default_rng(2)
+    N, Cc, R, E = 5, 2, 8, 7
+    src = np.concatenate([rng.integers(0, N, E), np.arange(N)])
+    dst = np.concatenate([rng.integers(0, N, E), np.arange(N)])
+    w = np.where(
+        rng.random((Cc, R, E + N)) < 0.8,
+        rng.uniform(0.1, 10.0, (Cc, R, E + N)),
+        -np.inf,
+    )
+    w[:, :, E:] = rng.uniform(0.0, 3.0, (Cc, R, N))  # self-loops present
+    a = timing_recursion_time_varying_sparse(src, dst, w, N)
+    b = np.asarray(timing_recursion_time_varying_sparse_jax(src, dst, w, N))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def random_strong_dense(rng, n):
+    W = np.full((n, n), -np.inf)
+    for i in range(n):
+        W[i, (i + 1) % n] = rng.uniform(0.5, 20.0)
+        W[i, i] = rng.uniform(0.0, 5.0)
+        j = rng.randrange(n)
+        if j != i:
+            W[i, j] = rng.uniform(0.5, 20.0)
+    return W
+
+
+def test_critical_circuit_sparse_matches_dense_oracle():
+    for seed in range(40):
+        rng = random.Random(seed)
+        n = rng.randint(2, 12)
+        W = random_strong_dense(rng, n)
+        tau_d, circ_d = critical_circuit_dense(W)
+        eb = dense_to_edge_batch(W)
+        tau_s, circ_s = critical_circuit_sparse(
+            eb.src[0], eb.dst[0], eb.w[0], n
+        )
+        assert tau_s == pytest.approx(tau_d, rel=1e-9)
+        hops = list(zip(circ_s[:-1], circ_s[1:]))
+        mean = sum(W[a, b] for (a, b) in hops) / len(hops)
+        assert mean == pytest.approx(tau_s, rel=1e-6)
+
+
+def test_critical_circuit_sparse_acyclic_and_self_loop():
+    W = np.full((3, 3), -np.inf)
+    W[0, 1], W[1, 2] = 1.0, 2.0
+    eb = dense_to_edge_batch(W)
+    assert critical_circuit_sparse(eb.src[0], eb.dst[0], eb.w[0], 3) == (
+        -math.inf,
+        [],
+    )
+    W = np.full((2, 2), -np.inf)
+    W[1, 1] = 4.0
+    eb = dense_to_edge_batch(W)
+    tau, circ = critical_circuit_sparse(eb.src[0], eb.dst[0], eb.w[0], 2)
+    assert tau == pytest.approx(4.0) and circ == [1, 1]
+
+
+def test_degree_table_pricing_path_is_bit_identical():
+    """bode's large-batch degree-table fast path must equal the general
+    per-entry path exactly (same expressions, same order)."""
+    u, gc, tp = gaia_setup()
+    arcs = [e for e in gc.edges() if e[0] != e[1]]
+    rng = np.random.default_rng(3)
+    masks = rng.random((600, len(arcs))) < 0.3  # B >> D^2: table path
+    eb_big = batched_overlay_delay_edges(gc, tp, arcs, masks)
+    for b in rng.choice(600, 25, replace=False):
+        eb_row = batched_overlay_delay_edges(gc, tp, arcs, masks[b : b + 1])
+        np.testing.assert_array_equal(eb_row.w[0], eb_big.w[int(b)])
+
+
+# ---------------------------------------------------------------------------
+# Registry + dynamics-facing behavior
+
+
+def test_design_schedule_registry():
+    u, gc, tp = gaia_setup()
+    fs = C.design_schedule("ring", gc, tp)
+    assert isinstance(fs, FixedSchedule) and not fs.is_randomized
+    ms = C.design_schedule("matcha", gc, tp, budgets=(0.2, 0.5), rounds=40,
+                           seeds=(0,))
+    assert isinstance(ms, MatchaSchedule) and ms.budget in (0.2, 0.5)
+    assert "matcha" in C.SCHEDULE_KINDS
+    with pytest.raises(KeyError):
+        C.design_schedule("nope", gc, tp)
+
+
+def test_fixed_schedule_simulate_rounds_with_no_arcs_is_comp_only():
+    """A degenerate (edge-less) overlay after heavy churn must calibrate
+    to the comp-only self-loop profile, not raise — the controller calls
+    this from inside observe_round."""
+    from repro.core.topologies import Overlay
+
+    u, gc, tp = gaia_setup()
+    fs = FixedSchedule(Overlay(name="trivial", edges=(), cycle_time_ms=0.0))
+    d = fs.simulate_rounds(gc, tp, 10)
+    comp = max(tp.local_steps * gc.silo_params[v].comp_time_ms
+               for v in gc.silos)
+    np.testing.assert_allclose(d, comp)
+
+
+def test_design_matcha_schedule_raises_infeasible_on_pairless_graph():
+    from repro.core.delays import ConnectivityGraph, SiloParams
+    from repro.core.schedule import ScheduleInfeasibleError
+
+    _, _, tp = gaia_setup()
+    gc = ConnectivityGraph(
+        silos=(0, 1),
+        latency_ms={(0, 1): 5.0},  # one direction only: no symmetric pair
+        available_bw_gbps={(0, 1): 1.0},
+        silo_params={v: SiloParams(1.0, 1.0, 1.0) for v in (0, 1)},
+    )
+    with pytest.raises(ScheduleInfeasibleError):
+        design_matcha_schedule(gc, tp, budgets=(0.5,), rounds=10, seeds=(0,))
+
+
+def test_simulate_rounds_batch_matches_per_seed_calls():
+    u, gc, tp = gaia_setup()
+    ms = C.matcha_schedule_from_underlay(u, 0.4)
+    batch = ms.simulate_rounds_batch(gc, tp, 30, seeds=(0, 1, 2))
+    assert batch.shape == (3, 30)
+    for i, s in enumerate((0, 1, 2)):
+        np.testing.assert_array_equal(
+            batch[i], ms.simulate_rounds(gc, tp, 30, seed=s)
+        )
+
+
+def test_matcha_pricing_filters_vanished_silos():
+    """Dynamics: pricing on an active-subgraph estimate drops matching
+    pairs whose silos left — no KeyError, finite tau."""
+    from repro.dynamics import active_subgraph
+
+    u, gc, tp = gaia_setup()
+    ms = C.matcha_schedule_from_underlay(u, 0.4)
+    sub = active_subgraph(gc, [v for v in gc.silos if v != 4])
+    est = ms.price(sub, tp, rounds=40)
+    assert np.isfinite(est.tau_ms) and est.tau_ms > 0
