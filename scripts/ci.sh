@@ -1,9 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): the full test suite must pass.
-# Usage: scripts/ci.sh [extra pytest args]
+# Usage: scripts/ci.sh [--fast] [extra pytest args]
+#
+#   --fast   deselect tests marked `slow` (Monte-Carlo schedule sweeps,
+#            subprocess train acceptance runs) — the minutes-scale lane
+#            for inner-loop development.  The DEFAULT (no flag) runs the
+#            full suite including slow tests: that is the tier-1 gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+FAST_ARGS=()
+if [[ "${1:-}" == "--fast" ]]; then
+  FAST_ARGS=(-m "not slow")
+  shift
+fi
 # Property tests silently degrade to deterministic compat-shim sweeps when
 # hypothesis is missing (tests/_hypothesis_compat.py) — make sure CI runs
 # the real thing.  Offline/airgapped runs fall back to the shim with a
@@ -19,7 +29,10 @@ echo "== docs gate =="
 python -m pytest -x -q tests/test_readme_quickstart.py
 echo "== tier-1 =="
 # --ignore: the docs gate already ran that file; don't run it twice
-python -m pytest -x -q --ignore=tests/test_readme_quickstart.py "$@"
+# ${arr[@]+...} guard: empty-array expansion under `set -u` aborts on
+# bash < 4.4 (e.g. macOS system bash)
+python -m pytest -x -q --ignore=tests/test_readme_quickstart.py \
+  ${FAST_ARGS[@]+"${FAST_ARGS[@]}"} "$@"
 echo "== bench smoke =="
 # Seconds-scale pass over the smoke-capable benchmarks (tiny grids, perf
 # asserts off, correctness asserts on) so bench code cannot silently rot.

@@ -1,1 +1,7 @@
-from .io import save_checkpoint, load_checkpoint, tree_to_bytes, tree_from_bytes
+from .io import (
+    load_checkpoint,
+    save_checkpoint,
+    save_silo_checkpoint,
+    tree_from_bytes,
+    tree_to_bytes,
+)

@@ -84,3 +84,17 @@ def load_checkpoint(path: str, like) -> Any:
     with open(path, "rb") as f:
         blob = f.read()
     return tree_from_bytes(blob, like)
+
+
+def save_silo_checkpoint(directory: str, silo: int, state, step: int) -> str:
+    """Checkpoint one departing silo's shard under elastic membership.
+
+    ``state`` is the silo-stacked train state *sliced to this silo's row*
+    (every leaf without its leading silo dimension) — the leaver's
+    parameters and optimizer slots at the instant its shard is dropped
+    from the mesh, so a later rejoin (or audit) can recover exactly what
+    the silo had trained.  Returns the written path
+    ``<directory>/silo<label>_step<step>.msgpack``."""
+    path = os.path.join(directory, f"silo{int(silo)}_step{int(step)}.msgpack")
+    save_checkpoint(path, state, step=step)
+    return path

@@ -69,15 +69,30 @@ class FederatedBatcher:
             yield self.batch(step)
             step += 1
 
-    def batch(self, step: int) -> Dict[str, np.ndarray]:
+    def batch(
+        self, step: int, silos: Optional[Tuple[int, ...]] = None
+    ) -> Dict[str, np.ndarray]:
+        """One DPASGD batch.
+
+        ``silos`` restricts (and orders) the stacked silo dimension to a
+        subset of the stream's silo universe — under elastic membership
+        the mesh hosts only the active silos, but each silo label keeps
+        its own data distribution across leaves/rejoins (row k of the
+        batch is silo ``silos[k]``, not "the k-th mesh position's
+        stream").  Default: every silo, in label order."""
         s, B = self.local_steps, self.batch_per_silo
+        labels = tuple(range(self.stream.n_silos)) if silos is None else tuple(silos)
         per_silo = []
-        for i in range(self.stream.n_silos):
+        for i in labels:
+            if not (0 <= i < self.stream.n_silos):
+                raise ValueError(
+                    f"silo {i} outside stream universe 0..{self.stream.n_silos - 1}"
+                )
             micro = [self.stream.sample(i, B, step * s + m) for m in range(s)]
             per_silo.append(
                 {k: np.stack([m[k] for m in micro]) for k in micro[0]}
             )
-        if self.stream.n_silos == 1:
+        if self.stream.n_silos == 1 and silos is None:
             return per_silo[0]
         return {k: np.stack([ps[k] for ps in per_silo]) for k in per_silo[0]}
 

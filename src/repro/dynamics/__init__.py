@@ -46,6 +46,16 @@ sampled topologies, and the controller
 ``schedule_family``) re-fits the distribution on drift and hot-swaps
 fixed ↔ randomized through a :class:`~repro.fed.gossip.ScheduleSlot`.
 
+Membership is elastic end-to-end: ``SiloJoin``/``SiloLeave`` churn flows
+from the scenario (:meth:`DynamicTimeline.current_active`) through the
+controller's ``membership_provider`` — churn is control-plane knowledge,
+so it triggers an *immediate* re-design over the surviving universe,
+bypassing the strike detector — into a
+:class:`~repro.fed.gossip.MembershipSlot` the training loop watches to
+rebuild its device mesh and migrate the silo-stacked state
+(:func:`repro.fed.dpasgd.migrate_silo_state`: survivors bit-identical,
+joiners at the survivors' consensus average).
+
 ``examples/dynamic_topology.py`` runs the whole stack on a Gaia
 core-link failure; ``benchmarks/dynamics_bench.py`` tracks re-design
 latency (candidates/sec) and simulator throughput (scenario-rounds/sec).
@@ -64,6 +74,7 @@ from .events import (
     SiloLeave,
     active_subgraph,
     busiest_core_link,
+    churn_scenario,
     link_failure_scenario,
     random_scenario,
     silo_degrade_scenario,

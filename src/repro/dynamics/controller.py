@@ -66,7 +66,7 @@ from ..core.schedule import (
     design_matcha_schedule,
 )
 from ..core.topologies import Overlay, design_overlay, search_overlays_jit
-from ..fed.gossip import GossipPlan, PlanSlot, ScheduleSlot
+from ..fed.gossip import GossipPlan, MembershipSlot, PlanSlot, ScheduleSlot
 from ..fed.topology_runtime import plan_from_overlay
 
 Arc = Tuple[int, int]
@@ -125,6 +125,8 @@ class Redesign:
     elapsed_s: float  # wall time of the whole re-design step
     bottleneck: Tuple[int, ...]  # critical circuit of the new overlay
     schedule: Optional[Schedule] = None  # the winning schedule (always set)
+    membership: Optional[Tuple[int, ...]] = None  # new active set, when churn
+    # triggered this actuation (None: same universe as the previous design)
 
 
 def search_ring_candidates(
@@ -304,6 +306,8 @@ class OnlineTopologyController:
         plan_slot: Optional[PlanSlot] = None,
         schedule_slot: Optional[ScheduleSlot] = None,
         schedule: Optional[Schedule] = None,
+        membership_slot: Optional[MembershipSlot] = None,
+        membership_provider: Optional[Callable[[], Sequence[int]]] = None,
     ):
         """``overlay`` is the initial (or fallback) fixed overlay; pass
         ``schedule`` to start on a randomized one instead (``overlay``
@@ -311,10 +315,24 @@ class OnlineTopologyController:
         ``schedule_slot`` is the schedule-valued hot-swap hook — it
         receives *every* winner, fixed or randomized; ``plan_slot`` keeps
         the legacy fixed-plan interface and is skipped (with an audit
-        note) when a randomized schedule wins."""
+        note) when a randomized schedule wins.
+
+        ``membership_provider`` is the control-plane signal of elastic
+        membership: the current active silo set (in a deployment, the
+        consortium's registration service; in the simulator, the
+        scenario's current epoch).  Unlike congestion — which must be
+        *inferred* from round timings through the strike detector — churn
+        is *known*, so a membership change triggers an immediate
+        re-design over the surviving universe, bypassing warmup, strikes,
+        and cooldown.  The new active set is published through
+        ``membership_slot`` (see :class:`~repro.fed.gossip.MembershipSlot`)
+        *before* the plan/schedule slots are resized onto it, so the
+        training loop always observes membership first and can rebuild
+        its mesh/state before re-lowering."""
         self.tp = tp
         self.config = config
         self.gc = gc
+        self._gc_full = gc  # launch-time estimate over the full universe
         self.overlay = overlay
         self.schedule: Schedule = (
             schedule if schedule is not None else FixedSchedule(overlay)
@@ -330,6 +348,13 @@ class OnlineTopologyController:
         self.connectivity_provider = connectivity_provider
         self.plan_slot = plan_slot
         self.schedule_slot = schedule_slot
+        self.membership_slot = membership_slot
+        self.membership_provider = membership_provider
+        self._active: Tuple[int, ...] = (
+            membership_slot.active
+            if membership_slot is not None
+            else tuple(sorted(gc.silos))
+        )
         self.plan = plan_from_overlay(overlay, len(gc.silos), silos=gc.silos)
         if plan_slot is not None and plan_slot.version == 0:
             plan_slot.swap(self.plan, label="controller-init")
@@ -392,6 +417,18 @@ class OnlineTopologyController:
         """Feed one realized round duration; maybe returns an actuation."""
         self._round += 1
         self._rounds_since_swap += 1
+        if self.membership_provider is not None:
+            active = tuple(sorted(self.membership_provider()))
+            if active != self._active:
+                # Churn is control-plane knowledge, not a timing anomaly:
+                # re-design immediately over the surviving universe (no
+                # warmup / strikes / cooldown — a departed silo must stop
+                # being mixed with, a joiner must start).
+                measured = self.measured_ms
+                return self._redesign(
+                    measured if measured is not None else duration_ms,
+                    membership=active,
+                )
         if self._rounds_since_swap <= self._warmup:
             return None  # swap transient: not the network's fault
         self._window.append(duration_ms)
@@ -431,10 +468,35 @@ class OnlineTopologyController:
         )
         return tuple(self.gc.silos[c] for c in circ)
 
-    def _redesign(self, measured: float) -> Redesign:
+    def _redesign(
+        self, measured: float, membership: Optional[Tuple[int, ...]] = None
+    ) -> Redesign:
         t0 = time.perf_counter()
         if self.connectivity_provider is not None:
             self.gc = self.connectivity_provider()
+        elif membership is not None:
+            # no measurement service: restrict the launch-time estimate
+            # to the reported membership so the designed plan/schedule
+            # spans exactly the silos the MembershipSlot publishes (the
+            # full-universe snapshot also covers rejoining silos)
+            from .events import active_subgraph
+
+            self.gc = active_subgraph(self._gc_full, membership)
+        if membership is not None and membership != self._active:
+            old_active = self._active
+            self._active = membership
+            if self.membership_slot is not None:
+                # Publish membership before resizing plan/schedule slots:
+                # the training loop rebuilds its mesh/state off this.
+                self.membership_slot.swap(
+                    membership,
+                    label=(
+                        f"round{self._round}: {len(old_active)} -> "
+                        f"{len(membership)} silos"
+                    ),
+                )
+        else:
+            membership = None  # unchanged universe: not a membership event
         best_sched: Optional[Schedule] = None
         sched_tau: Optional[float] = None
         scored = 0
@@ -505,7 +567,13 @@ class OnlineTopologyController:
         elapsed = time.perf_counter() - t0
         label = f"round{self._round}:{name}"
         if self.schedule_slot is not None:
-            self.schedule_slot.swap_schedule(best_sched, label=label)
+            self.schedule_slot.swap_schedule(
+                best_sched,
+                label=label,
+                # on a membership event the schedule spans a different
+                # universe: re-pin the label -> mesh-position order
+                silos=tuple(self.gc.silos) if membership is not None else None,
+            )
             if plan is None:
                 plan = self.schedule_slot.plan
         if self.plan_slot is not None:
@@ -522,12 +590,18 @@ class OnlineTopologyController:
                 )
             elif plan.n_silos == self.plan_slot.plan.n_silos:
                 self.plan_slot.swap(plan, label=label)
+            elif membership is not None and self.membership_slot is not None:
+                # Elastic membership: the MembershipSlot swap above (this
+                # actuation's, not a mere slot existing) told the training
+                # loop to rebuild mesh/state; the resized plan rides the
+                # same actuation.
+                self.plan_slot.swap(plan, label=label, allow_resize=True)
             else:
-                # Churn changed the silo count but the slot's mesh axis is
-                # sized at launch and cannot follow (ROADMAP follow-up:
-                # rebuild mesh/state on SiloJoin/SiloLeave).  Keep the old
-                # plan running and leave an audit note instead of crashing
-                # the training loop from inside observe_round.
+                # Churn changed the silo count but without a
+                # MembershipSlot the mesh axis is sized at launch and
+                # cannot follow.  Keep the old plan running and leave an
+                # audit note instead of crashing the training loop from
+                # inside observe_round.
                 self.plan_slot.history.append(
                     (
                         self.plan_slot.version,
@@ -555,6 +629,7 @@ class OnlineTopologyController:
             elapsed_s=elapsed,
             bottleneck=bottleneck,
             schedule=best_sched,
+            membership=membership,
         )
         self.redesigns.append(redesign)
         return redesign

@@ -51,7 +51,12 @@ class NetworkEvent:
 
 @dataclass(frozen=True)
 class LinkDegraded(NetworkEvent):
-    """Core link keeps operating at ``factor`` of its nominal capacity."""
+    """Core link keeps operating at ``factor`` of its nominal capacity.
+
+    ``factor=1.0`` *clears* a previous degradation (the link returns to
+    full capacity) — the only way to undo one: degradation and failure
+    are orthogonal state dimensions, and :class:`LinkRestored` touches
+    only the failure."""
 
     link: LinkKey
     factor: float
@@ -70,7 +75,14 @@ class LinkFailed(NetworkEvent):
 
 @dataclass(frozen=True)
 class LinkRestored(NetworkEvent):
-    """Core link returns at full nominal capacity."""
+    """Core link comes back up, undoing a :class:`LinkFailed`.
+
+    Restore-to-degraded semantics: a :class:`LinkDegraded` factor applied
+    before (or during) the outage *persists* after the restore — repairing
+    a fiber cut does not also fix congestion.  A degrade → fail → restore
+    interleaving therefore lands on the degraded capacity, not nominal;
+    only ``LinkDegraded(factor=1.0)`` returns the link to full capacity
+    (tested in ``tests/test_dynamics.py``)."""
 
     link: LinkKey
 
@@ -124,16 +136,18 @@ class NetworkState:
         if isinstance(ev, LinkRestored):
             key = _link_key(ev.link)
             self._check_link(key)
-            caps = dict(self.capacity_factor)
-            caps.pop(key, None)
-            return dataclasses.replace(
-                self, failed_links=self.failed_links - {key}, capacity_factor=caps
-            )
+            # restore-to-degraded: only the failure is undone; a prior
+            # LinkDegraded factor survives the outage (see the event's
+            # docstring for the decided semantics)
+            return dataclasses.replace(self, failed_links=self.failed_links - {key})
         if isinstance(ev, LinkDegraded):
             key = _link_key(ev.link)
             self._check_link(key)
             caps = dict(self.capacity_factor)
-            caps[key] = ev.factor
+            if ev.factor == 1.0:
+                caps.pop(key, None)  # factor 1.0 = back to nominal capacity
+            else:
+                caps[key] = ev.factor
             return dataclasses.replace(self, capacity_factor=caps)
         if isinstance(ev, SiloLeave):
             self._check_silo(ev.silo)
@@ -398,6 +412,36 @@ def silo_degrade_scenario(
     )
 
 
+def churn_scenario(
+    underlay: Underlay,
+    comp_time_ms: float,
+    *,
+    silo: int,
+    t_leave_ms: float,
+    t_rejoin_ms: float,
+    horizon_ms: float = 60_000.0,
+) -> Scenario:
+    """One silo leaves training and later rejoins — the minimal elastic-
+    membership scenario: the training loop must rebuild its mesh/state on
+    the :class:`SiloLeave` and again on the paired :class:`SiloJoin`."""
+    if not (0 <= silo < underlay.num_silos):
+        raise ValueError(f"silo {silo} outside universe of {underlay.name}")
+    if not (0.0 < t_leave_ms < t_rejoin_ms):
+        raise ValueError(
+            f"need 0 < t_leave_ms < t_rejoin_ms, got {t_leave_ms}, {t_rejoin_ms}"
+        )
+    return Scenario(
+        name=f"{underlay.name}-churn",
+        underlay=underlay,
+        comp_time_ms=comp_time_ms,
+        events=(
+            SiloLeave(t_ms=t_leave_ms, silo=silo),
+            SiloJoin(t_ms=t_rejoin_ms, silo=silo),
+        ),
+        horizon_ms=horizon_ms,
+    )
+
+
 def random_scenario(
     underlay: Underlay,
     comp_time_ms: float,
@@ -410,23 +454,34 @@ def random_scenario(
     p_straggler: float = 0.25,
     p_churn: float = 0.15,
     min_degrade: float = 0.02,
+    min_active: int = 3,
 ) -> Scenario:
     """Seeded random event stream over ``(0, horizon_ms)``.
 
     Event mix: capacity degradations, link failures (each later restored
     with probability 1/2), compute stragglers, and silo leave/rejoin
-    churn.  The same (underlay, seed) always yields the same scenario."""
+    churn.  The same (underlay, seed) always yields the same scenario.
+
+    Churn keeps at least ``max(1, min_active)`` silos active at every
+    instant: each :class:`SiloLeave` schedules its paired
+    :class:`SiloJoin` inside the horizon, the candidate pool tracks those
+    rejoin times (a silo whose rejoin has fired may be picked to leave
+    again — the pool does not shrink monotonically), and a leave that
+    would cross the floor is converted into a straggler instead."""
     rng = np.random.default_rng(seed)
     probs = np.array([p_degrade, p_fail, p_straggler, p_churn])
     probs = probs / probs.sum()
     links = [_link_key(e) for e in underlay.core_edges]
     events: List[NetworkEvent] = []
-    away: set = set()  # silos currently departed
+    away: Dict[int, float] = {}  # silo -> scheduled rejoin time
+    floor = max(1, min(min_active, underlay.num_silos))
     times = np.sort(rng.uniform(0.05 * horizon_ms, 0.95 * horizon_ms, n_events))
     for t in times:
+        for v in [v for v, t_back in away.items() if t_back <= t]:
+            del away[v]  # rejoin fired: back in the candidate pool
         kind = int(rng.choice(4, p=probs))
-        if kind == 3 and len(away) >= underlay.num_silos - 3:
-            kind = 2  # keep >= 3 silos active: churn becomes a straggler
+        if kind == 3 and underlay.num_silos - len(away) <= floor:
+            kind = 2  # at the active floor: churn becomes a straggler
         if kind == 0:
             link = links[int(rng.integers(len(links)))]
             factor = float(rng.uniform(min_degrade, 0.5))
@@ -444,8 +499,8 @@ def random_scenario(
         else:
             candidates = [v for v in range(underlay.num_silos) if v not in away]
             silo = candidates[int(rng.integers(len(candidates)))]
-            away.add(silo)
             t_back = float(rng.uniform(t, horizon_ms))
+            away[silo] = t_back
             events.append(SiloLeave(t_ms=float(t), silo=silo))
             events.append(SiloJoin(t_ms=t_back, silo=silo))
     return Scenario(

@@ -276,6 +276,13 @@ class DynamicTimeline:
         e = int(_epoch_of(self.starts, np.array([self.now_ms]))[0])
         return self.epochs[e]
 
+    def current_active(self) -> Tuple[int, ...]:
+        """Active silo labels of the current epoch — the control-plane
+        membership signal (``SiloJoin``/``SiloLeave`` are *known*, not
+        inferred from timings).  Feed this as the controller's
+        ``membership_provider`` to drive elastic mesh/state rebuilds."""
+        return self.current_epoch().active
+
     def step(self) -> float:
         """Advance one communication round; return its realized duration."""
         if self._Weff is None and (

@@ -9,6 +9,9 @@ Public surface:
   randomized plans: samples one :class:`~repro.fed.gossip.GossipPlan`
   per communication round from a shared round counter (every silo
   derives the identical plan with no coordination);
+* :class:`~repro.fed.gossip.MembershipSlot` — the versioned active-silo
+  set under elastic membership; the training loop rebuilds mesh/state
+  (via :func:`~repro.fed.dpasgd.migrate_silo_state`) whenever it moves;
 * :func:`~repro.fed.gossip.gossip_einsum` /
   :func:`~repro.fed.gossip.gossip_shard_map` /
   :func:`~repro.fed.gossip.collective_bytes_per_round` — the gossip
@@ -24,11 +27,20 @@ Public surface:
 
 from .gossip import (
     GossipPlan,
+    MembershipSlot,
     PlanSlot,
     ScheduleSlot,
     collective_bytes_per_round,
     gossip_einsum,
     gossip_shard_map,
 )
-from .dpasgd import DPASGDConfig, make_train_step, init_state, local_sgd_steps
+from .dpasgd import (
+    DPASGDConfig,
+    init_state,
+    local_sgd_steps,
+    make_train_step,
+    masked_consensus,
+    migrate_silo_state,
+    slice_silo_row,
+)
 from .topology_runtime import plan_from_overlay

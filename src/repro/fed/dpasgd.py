@@ -57,6 +57,100 @@ def make_loss_fn(cfg: ModelConfig):
     return loss
 
 
+def masked_consensus(A, active_mask):
+    """Renormalize a consensus matrix over the active silos.
+
+    ``A`` is ``[n, n]`` row-stochastic, ``active_mask`` is ``[n]``
+    (bool/0-1).  Arcs touching an inactive silo are dropped and each
+    surviving row is renormalized to sum to 1, so the weight a silo gave
+    its departed in-neighbours is returned to the survivors
+    proportionally — consensus keeps averaging over exactly the silos
+    still training.  Inactive rows (and active rows whose in-neighbours
+    all left) become identity: a departed silo's stale parameters are
+    frozen, not pulled toward the survivors.  Pure jnp, so it can run on
+    a *traced* mask inside the ``consensus_arg`` train step."""
+    A = jnp.asarray(A)
+    m = (jnp.asarray(active_mask) > 0).astype(A.dtype)
+    Am = A * m[None, :] * m[:, None]
+    rows = Am.sum(axis=1, keepdims=True)
+    keep = rows > 0
+    out = Am / jnp.where(keep, rows, 1.0)
+    return jnp.where(keep, out, jnp.eye(A.shape[0], dtype=A.dtype))
+
+
+def _is_silo_stacked(x, n_silos: int) -> bool:
+    """One rule for "does this leaf carry the leading silo dimension":
+    shared by the migration and the leaver-row slicer so they cannot
+    drift apart."""
+    return getattr(x, "ndim", 0) > 0 and x.shape[0] == n_silos
+
+
+def slice_silo_row(state, active, silo):
+    """One silo's row of a silo-stacked train state (host numpy).
+
+    ``active`` is the label tuple the state's leading dim is stacked by.
+    Stacked leaves are indexed at the silo's mesh position; shared leaves
+    (the step counter) pass through — the shape a leaver's shard is
+    checkpointed in (:func:`repro.checkpoint.save_silo_checkpoint`)."""
+    row = tuple(active).index(silo)
+    n = len(active)
+
+    def pick(x):
+        x = np.asarray(jax.device_get(x))
+        return x[row] if _is_silo_stacked(x, n) else x
+
+    return jax.tree_util.tree_map(pick, state)
+
+
+def migrate_silo_state(state, old_active, new_active):
+    """Re-stack the silo-stacked train state from one active set to another.
+
+    ``old_active`` / ``new_active`` are the sorted silo-label tuples the
+    state's leading dimension is (was / will be) stacked by — mesh
+    position k holds silo ``active[k]``.  Gathers every leaf to host and
+    re-indexes the silo dimension:
+
+    * **survivors** (labels in both sets) keep their rows *bit-identical*
+      — parameters and optimizer slots migrate untouched;
+    * **leavers'** rows are dropped (checkpoint them first if wanted —
+      see ``launch/train.py --churn-checkpoint``);
+    * **joiners** are initialized at the survivors' consensus average
+      (uniform mean, accumulated in float64 and cast back to the leaf
+      dtype) — the model a silo syncing from its overlay neighbours
+      would converge to.
+
+    Leaves without a leading ``len(old_active)`` dimension (the shared
+    step counter) pass through unchanged.  Returns
+    ``(new_state, joined, left)`` with host-numpy leaves; the caller
+    re-shards onto the rebuilt mesh."""
+    old_active = tuple(old_active)
+    new_active = tuple(new_active)
+    old_index = {v: k for k, v in enumerate(old_active)}
+    survivors = [v for v in new_active if v in old_index]
+    if not survivors:
+        raise ValueError(
+            f"no surviving silos between {old_active} and {new_active}: "
+            "cannot migrate state"
+        )
+    joined = tuple(v for v in new_active if v not in old_index)
+    left = tuple(v for v in old_active if v not in set(new_active))
+    surv_rows = [old_index[v] for v in survivors]
+
+    def move(x):
+        x = np.asarray(jax.device_get(x))
+        if not _is_silo_stacked(x, len(old_active)):
+            return x  # shared (unstacked) leaf, e.g. the step counter
+        if joined:  # consensus average only needed when someone joins
+            avg = x[surv_rows].mean(axis=0, dtype=np.float64).astype(x.dtype)
+            rows = [
+                x[old_index[v]] if v in old_index else avg for v in new_active
+            ]
+            return np.stack(rows)
+        return x[surv_rows]  # fancy indexing: already a fresh array
+
+    return jax.tree_util.tree_map(move, state), joined, left
+
+
 def local_sgd_steps(
     loss_fn,
     optimizer: Optimizer,
@@ -135,6 +229,14 @@ def make_train_step(
     schedules (:class:`~repro.fed.gossip.ScheduleSlot`): the sampled
     topology changes every round, so it must be data, not a baked
     constant, or every round would recompile.  ``plan`` is ignored then.
+
+    The traced path also takes an optional fourth argument —
+    ``step_fn(state, batch, A, active_mask)`` — an ``[n]`` 0/1 mask that
+    renormalizes the consensus over the active silos
+    (:func:`masked_consensus`): under elastic membership a silo can
+    depart mid-round-window, and the mask keeps the mix from averaging
+    in its stale parameters during the one-round lag before the
+    controller swaps membership and the loop rebuilds the mesh.
     """
     loss_fn = make_loss_fn(cfg)
     n_silos = cfg.n_silos
@@ -145,7 +247,7 @@ def make_train_step(
             "step and cannot follow a per-round matrix"
         )
 
-    def step_fn(state, batch, consensus=None):
+    def step_fn(state, batch, consensus=None, active_mask=None):
         params, opt_state, step = state["params"], state["opt_state"], state["step"]
         if n_silos == 1:
             params, opt_state, step, loss = local_sgd_steps(
@@ -166,7 +268,10 @@ def make_train_step(
             loss = losses.mean()
             # consensus mix (the paper's technique)
             if consensus_arg and fed.gossip_impl != "none":
-                params = gossip_einsum(params, jnp.asarray(consensus))
+                A = jnp.asarray(consensus)
+                if active_mask is not None:
+                    A = masked_consensus(A, active_mask)
+                params = gossip_einsum(params, A)
             elif fed.gossip_impl == "einsum":
                 params = gossip_einsum(params, jnp.asarray(plan.matrix))
             elif fed.gossip_impl in ("ppermute", "pallas"):

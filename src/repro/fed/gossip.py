@@ -111,8 +111,17 @@ class PlanSlot:
         self._callbacks.append(callback)
         return callback
 
-    def swap(self, plan: GossipPlan, label: str = "") -> int:
-        if plan.n_silos != self._plan.n_silos:
+    def swap(self, plan: GossipPlan, label: str = "", *,
+             allow_resize: bool = False) -> int:
+        """Install ``plan`` and bump ``version``.
+
+        A plan over a different silo count is rejected unless
+        ``allow_resize=True`` — the caller asserting that the silo mesh
+        axis is being rebuilt too (elastic membership: the controller
+        resizes the plan only after swapping a
+        :class:`MembershipSlot`, and the training loop migrates
+        mesh/state before re-lowering on the resized plan)."""
+        if not allow_resize and plan.n_silos != self._plan.n_silos:
             raise ValueError(
                 f"plan spans {plan.n_silos} silos, slot holds {self._plan.n_silos}"
             )
@@ -164,12 +173,35 @@ class ScheduleSlot(PlanSlot):
     def schedule(self):
         return self._schedule
 
-    def swap_schedule(self, schedule, label: str = "") -> int:
+    def swap_schedule(self, schedule, label: str = "",
+                      silos: Optional[Sequence] = None) -> int:
         """Install a new schedule (fixed or randomized); bumps ``version``
-        and fires the ``on_swap`` callbacks with the round-0 plan."""
+        and fires the ``on_swap`` callbacks with the round-0 plan.
+
+        ``silos`` re-pins the label -> mesh-position order — pass it when
+        elastic membership changed the active universe (the new schedule
+        spans different silos than the old one); the round-0 plan is then
+        allowed to change silo count, and the caller must rebuild the
+        mesh/state to match (see :class:`MembershipSlot`)."""
+        resized = silos is not None
+        rollback = (self._schedule, self._silos, self._n, self._plan_cache,
+                    self._plan, self.version, list(self.history))
+        if resized:
+            self._silos = tuple(silos)
+            self._n = len(self._silos)
         self._schedule = schedule
-        self._plan_cache.clear()
-        return self.swap(self.plan_for_round(0), label=label)
+        self._plan_cache = {}
+        try:
+            return self.swap(self.plan_for_round(0), label=label,
+                             allow_resize=resized)
+        except Exception:
+            # failed swaps leave the slot untouched (PlanSlot invariant) —
+            # including the base-class plan/version/history, which a
+            # raising on_swap callback would otherwise leave half-moved
+            (self._schedule, self._silos, self._n, self._plan_cache,
+             self._plan, self.version, history) = rollback
+            self.history[:] = history
+            raise
 
     def _index(self, label) -> int:
         if self._silos is not None:
@@ -198,6 +230,79 @@ class ScheduleSlot(PlanSlot):
         """Consensus matrix of round ``round_idx`` — the array fed to a
         traced-consensus train step (no re-lowering between rounds)."""
         return self.plan_for_round(round_idx).matrix
+
+
+class MembershipSlot:
+    """Versioned active-silo set — the elastic-membership sibling of
+    :class:`PlanSlot` / :class:`ScheduleSlot`.
+
+    The silo *universe* (labels ``0..n_universe-1``, the underlay's full
+    silo set) is fixed at launch; the *active* subset changes on
+    ``SiloJoin`` / ``SiloLeave`` churn.  The device mesh axis and the
+    silo-stacked train state are sized to ``active``, so unlike a plan
+    swap a membership swap cannot be absorbed by re-lowering alone: the
+    training loop watches ``version`` and on a move re-builds the mesh,
+    migrates the state (gather → re-stack → re-shard; survivors keep
+    their rows bit-identical, joiners enter at the survivors' consensus
+    average — :func:`repro.fed.dpasgd.migrate_silo_state`), and re-lowers
+    the train step over the new silo count.  The online controller calls
+    :meth:`swap` when its membership signal drifts, *before* resizing the
+    plan/schedule slots, so consumers always observe membership first.
+
+    ``swap`` with an unchanged active set is a no-op (version does not
+    move); ``history`` keeps the (version, label) audit trail and
+    ``on_swap`` callbacks fire synchronously with ``(active, version)``.
+    """
+
+    def __init__(self, active: Sequence[int], n_universe: int):
+        self._universe = int(n_universe)
+        self._active = self._validate(active)
+        self.version = 0
+        self.history: List[Tuple[int, str]] = [(0, "init")]
+        self._callbacks: List[Any] = []
+
+    def _validate(self, active: Sequence[int]) -> Tuple[int, ...]:
+        act = tuple(sorted(int(v) for v in active))
+        if not act:
+            raise ValueError("membership cannot be empty: >= 1 active silo")
+        if len(set(act)) != len(act):
+            raise ValueError(f"duplicate silos in membership {act}")
+        if act[0] < 0 or act[-1] >= self._universe:
+            raise ValueError(
+                f"membership {act} outside universe 0..{self._universe - 1}"
+            )
+        return act
+
+    @property
+    def active(self) -> Tuple[int, ...]:
+        """Sorted active silo labels; index k is mesh position k."""
+        return self._active
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_universe(self) -> int:
+        return self._universe
+
+    def on_swap(self, callback) -> Any:
+        """Register ``callback(active, version)``; returns it."""
+        self._callbacks.append(callback)
+        return callback
+
+    def swap(self, active: Sequence[int], label: str = "") -> int:
+        """Install a new active set; returns the (possibly unmoved)
+        version.  No-op when the set is unchanged."""
+        act = self._validate(active)
+        if act == self._active:
+            return self.version
+        self._active = act
+        self.version += 1
+        self.history.append((self.version, label))
+        for cb in self._callbacks:
+            cb(act, self.version)
+        return self.version
 
 
 def gossip_einsum(params: Any, A: jax.Array) -> Any:

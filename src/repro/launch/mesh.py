@@ -40,6 +40,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return compat_make_mesh(shape, axes)
 
 
+def make_silo_mesh(n_silos: int, axis: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh hosting one silo per device index.
+
+    Elastic membership sizes this to the *active* silo count, which may
+    be (and after churn usually is) smaller than the device universe
+    fixed at process start (``xla_force_host_platform_device_count`` on
+    CPU, the physical slice on TPU): ``jax.make_mesh`` takes the first
+    ``n_silos`` devices and the rest idle until silos rejoin."""
+    n = len(jax.devices())
+    if not (1 <= n_silos <= n):
+        raise ValueError(f"need 1 <= n_silos <= {n} devices, got {n_silos}")
+    return compat_make_mesh((n_silos,), (axis,))
+
+
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over the locally available devices (CPU tests/examples)."""
     n = len(jax.devices())

@@ -12,7 +12,14 @@ the silos is simulated from a real underlay (``--underlay``) through a
 seeded event scenario (``--scenario``), each training step advances the
 simulated network clock by one communication round, and when the
 controller detects throughput regression it re-designs the overlay and
-hot-swaps the gossip plan — the train step is re-lowered on the new plan:
+hot-swaps the gossip plan — the train step is re-lowered on the new plan.
+Membership is *elastic*: on ``SiloLeave``/``SiloJoin`` churn
+(``--scenario random`` with ``--p-churn > 0``, or the deterministic
+``--scenario churn``) the controller swaps a ``MembershipSlot`` and the
+loop rebuilds the device mesh over the surviving silos and migrates the
+silo-stacked state — survivors keep their parameters/optimizer slots
+bit-identical, leavers' shards are dropped (``--churn-checkpoint`` saves
+them first), joiners re-enter at the survivors' consensus average:
 
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --dynamic --underlay gaia --scenario linkfail --steps 60
@@ -56,7 +63,9 @@ def main() -> int:
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--dynamic", action="store_true",
                     help="simulate a time-varying WAN and run the online "
-                         "topology controller (silo count follows the underlay)")
+                         "topology controller (silo count follows the underlay; "
+                         "membership is elastic: on SiloJoin/SiloLeave the "
+                         "mesh/state are rebuilt over the surviving silos)")
     ap.add_argument("--designer", default="auto",
                     choices=["auto", "sparse-rewire", "matcha"],
                     help="overlay designer: 'sparse-rewire' designs the "
@@ -73,8 +82,22 @@ def main() -> int:
     ap.add_argument("--underlay", default="gaia")
     ap.add_argument("--workload", default="inaturalist")
     ap.add_argument("--scenario", default="linkfail",
-                    choices=["linkfail", "silodegrade", "random", "static"])
+                    choices=["linkfail", "silodegrade", "random", "static",
+                             "churn"])
     ap.add_argument("--scenario-seed", type=int, default=0)
+    ap.add_argument("--p-churn", type=float, default=0.15,
+                    help="--scenario random: probability mass of silo "
+                         "leave/rejoin churn in the event mix (elastic "
+                         "membership rebuilds the mesh/state on each)")
+    ap.add_argument("--churn-checkpoint", default="",
+                    help="directory: a departing silo's state row is "
+                         "checkpointed there before its shard is dropped")
+    ap.add_argument("--verify-migration", action="store_true",
+                    help="after each membership rebuild, re-gather the "
+                         "migrated state and verify survivors are "
+                         "bit-identical and joiners sit at the consensus "
+                         "average (full-model host sweep: acceptance "
+                         "tests/debugging, not production loops)")
     args = ap.parse_args()
 
     underlay = None
@@ -89,14 +112,20 @@ def main() -> int:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={max(args.silos, 1)}")
 
+    import contextlib
+
     import jax
     import jax.numpy as jnp
+    import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config
     from repro.data import SyntheticLMStream, FederatedBatcher
-    from repro.fed import DPASGDConfig, init_state, make_train_step
-    from repro.launch.mesh import compat_make_mesh, mesh_context
+    from repro.fed import (
+        DPASGDConfig, init_state, make_train_step, migrate_silo_state,
+        slice_silo_row,
+    )
+    from repro.launch.mesh import make_silo_mesh, mesh_context
     from repro.fed.topology_runtime import plan_for_n_silos, plan_from_overlay
     from repro.optim import momentum
 
@@ -107,7 +136,7 @@ def main() -> int:
 
     cfg = dataclasses.replace(cfg, n_silos=args.silos)
     n = args.silos
-    mesh = compat_make_mesh((n,), ("data",))
+    mesh = make_silo_mesh(n)
     opt = momentum(args.lr, 0.9)
     # Randomized schedules sample a fresh topology per round, so their
     # consensus matrix must be a *traced* step input (einsum lowering) —
@@ -122,7 +151,7 @@ def main() -> int:
                                     args.gossip_impl) if n > 1 else "none",
                        silo_axis="data")
 
-    timeline = controller = slot = sched_slot = None
+    timeline = controller = slot = sched_slot = mem_slot = None
     if args.dynamic:
         from repro.core import (
             DEFAULT_MATCHA_BUDGETS, OVERLAY_KINDS, TrainingParams, WORKLOADS,
@@ -130,10 +159,10 @@ def main() -> int:
         )
         from repro.dynamics import (
             ControllerConfig, DynamicTimeline, OnlineTopologyController,
-            active_subgraph, link_failure_scenario, random_scenario,
-            silo_degrade_scenario, static_scenario,
+            active_subgraph, churn_scenario, link_failure_scenario,
+            random_scenario, silo_degrade_scenario, static_scenario,
         )
-        from repro.fed.gossip import PlanSlot, ScheduleSlot
+        from repro.fed.gossip import MembershipSlot, PlanSlot, ScheduleSlot
 
         M, Tc = WORKLOADS[args.workload]
         tp = TrainingParams(model_size_mbits=M, local_steps=args.local_steps)
@@ -166,16 +195,23 @@ def main() -> int:
                 underlay, Tc, silo=underlay.load_centrality_center(),
                 t_ms=horizon / 3, horizon_ms=horizon)
         elif args.scenario == "random":
-            # churn disabled: the mesh axis (and the silo-stacked state)
-            # is sized once at launch and cannot shrink mid-run
+            # churn enabled: membership is elastic — on SiloJoin/SiloLeave
+            # the controller swaps the MembershipSlot and the loop below
+            # rebuilds the mesh and migrates the silo-stacked state
             scenario = random_scenario(
                 underlay, Tc, seed=args.scenario_seed, horizon_ms=horizon,
-                p_churn=0.0)
+                p_churn=args.p_churn)
+        elif args.scenario == "churn":
+            scenario = churn_scenario(
+                underlay, Tc, silo=underlay.num_silos // 2,
+                t_leave_ms=horizon / 4, t_rejoin_ms=horizon / 2,
+                horizon_ms=horizon)
         else:
             scenario = static_scenario(underlay, Tc, horizon_ms=horizon)
         timeline = DynamicTimeline(scenario, tp)
         provider = lambda: active_subgraph(  # noqa: E731 — shared by both modes
             timeline.current_epoch().gc, timeline.current_epoch().active)
+        mem_slot = MembershipSlot(range(n), n)
         if schedule is not None:
             timeline.set_schedule(schedule)
             sched_slot = ScheduleSlot(schedule, n)
@@ -192,7 +228,10 @@ def main() -> int:
             plan = slot.plan
         controller = OnlineTopologyController(
             gc0, tp, overlay, schedule=schedule, config=cfg_ctl,
-            connectivity_provider=provider, **slot_kw,
+            connectivity_provider=provider,
+            membership_slot=mem_slot,
+            membership_provider=timeline.current_active,
+            **slot_kw,
         )
     else:
         # Without --dynamic there are no network measurements to design
@@ -227,35 +266,66 @@ def main() -> int:
                       f"'{kind}' plan")
             plan = plan_for_n_silos(kind, n) if n > 1 else None
 
-    step_fn = make_train_step(cfg, fed, opt, plan, mesh,
-                              consensus_arg=sched_mode)
-    state = init_state(cfg, opt, jax.random.PRNGKey(0))
-    if n > 1:
+    def shard_state(state_host, mesh):
         def put(x):
             if getattr(x, "ndim", 0) > 0:
                 return jax.device_put(x, NamedSharding(
                     mesh, P(*(("data",) + (None,) * (x.ndim - 1)))))
             return x
 
-        state = jax.tree_util.tree_map(put, state)
+        return jax.tree_util.tree_map(put, state_host)
+
+    step_fn = make_train_step(cfg, fed, opt, plan, mesh,
+                              consensus_arg=sched_mode)
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    if n > 1:
+        state = shard_state(state, mesh)
+    # The data stream spans the full silo universe: under elastic
+    # membership each silo label keeps its own (non-iid) distribution
+    # across leaves/rejoins; the batcher stacks only the active labels.
     stream = SyntheticLMStream(cfg.vocab_size, args.seq_len, n_silos=max(n, 1))
     batcher = FederatedBatcher(stream, args.local_steps, args.batch_per_silo)
     jstep = jax.jit(step_fn)
     built_version = slot.version if slot is not None else 0
+    built_mem_version = mem_slot.version if mem_slot is not None else 0
+    active = tuple(range(n))
     t0 = time.time()
-    with mesh_context(mesh):
+    with contextlib.ExitStack() as mesh_stack:
+        mesh_stack.enter_context(mesh_context(mesh))
         for i in range(args.steps):
-            b = {k: jnp.asarray(v) for k, v in batcher.batch(i).items()}
+            if args.dynamic:
+                # one train step == one communication round of simulated
+                # WAN.  Simulated *first*, so the consensus mask below
+                # (and, after the step, the controller) see the epoch the
+                # round actually spans — a silo departing mid-round is
+                # masked out of this very round's mix, not the next one's.
+                duration = timeline.step()
+            b = {k: jnp.asarray(v) for k, v in
+                 batcher.batch(i, silos=active if args.dynamic else None)
+                 .items()}
             if sched_mode:
                 # per-round sampled consensus: traced argument, same
                 # compiled step for every sampled topology
                 A = jnp.asarray(sched_slot.matrix_for_round(i))
-                state, metrics = jstep(state, b, A)
+                if args.dynamic:
+                    # renormalize over the silos still active at the end
+                    # of this round: a leaver's stale params must not be
+                    # mixed in during the one-round lag before the
+                    # membership rebuild below
+                    ep_active = set(timeline.current_active())
+                    flags = [1.0 if v in ep_active else 0.0 for v in active]
+                    mask = jnp.asarray(flags, jnp.float32)
+                    n_act = int(sum(flags))  # host-side: no device sync
+                    if n_act < len(active):
+                        print(f"step {i:4d} consensus masked to "
+                              f"{n_act}/{len(active)} silos "
+                              f"(mid-round churn)", flush=True)
+                    state, metrics = jstep(state, b, A, mask)
+                else:
+                    state, metrics = jstep(state, b, A)
             else:
                 state, metrics = jstep(state, b)
             if args.dynamic:
-                # one train step == one communication round of simulated WAN
-                duration = timeline.step()
                 redesign = controller.observe_round(duration)
                 if redesign is not None:
                     timeline.set_schedule(redesign.schedule)
@@ -270,6 +340,72 @@ def main() -> int:
                           f"({redesign.n_candidates} candidates in "
                           f"{redesign.elapsed_s*1e3:.0f} ms), bottleneck "
                           f"{redesign.bottleneck}", flush=True)
+                if mem_slot is not None and mem_slot.version != built_mem_version:
+                    # elastic membership: rebuild the mesh over the active
+                    # silos and migrate the silo-stacked state (survivors
+                    # keep their rows, leavers' shards are dropped,
+                    # joiners enter at the survivors' consensus average)
+                    new_active = mem_slot.active
+                    # one host gather serves the migration, the leaver
+                    # checkpoints, and the verification below
+                    old_state = jax.device_get(state)
+                    old_params = old_state["params"]
+                    state_host, joined, left = migrate_silo_state(
+                        old_state, active, new_active)
+                    if args.churn_checkpoint and left:
+                        from repro.checkpoint import save_silo_checkpoint
+
+                        for v in left:
+                            # full row: params AND optimizer slots (plus
+                            # the shared step counter), so a later rejoin
+                            # can recover exactly what the silo trained
+                            row = slice_silo_row(old_state, active, v)
+                            path = save_silo_checkpoint(
+                                args.churn_checkpoint, v, row, step=i)
+                            print(f"step {i:4d} leaver silo {v} "
+                                  f"checkpoint -> {path}", flush=True)
+                    n = len(new_active)
+                    cfg = dataclasses.replace(cfg, n_silos=n)
+                    mesh = make_silo_mesh(n)
+                    mesh_stack.close()
+                    mesh_stack.enter_context(mesh_context(mesh))
+                    state = shard_state(state_host, mesh)
+                    jstep = jax.jit(make_train_step(
+                        cfg, fed, opt,
+                        None if sched_mode else slot.plan, mesh,
+                        consensus_arg=sched_mode))
+                    built_version = slot.version if slot is not None else 0
+                    built_mem_version = mem_slot.version
+                    msg = (f"step {i:4d} membership v{mem_slot.version}: "
+                           f"{len(active)} -> {n} silos "
+                           f"(left {list(left)}, joined {list(joined)}); "
+                           f"mesh+state rebuilt")
+                    if args.verify_migration:
+                        # re-gather and check the migration invariants —
+                        # a full-model host sweep, so opt-in (printed for
+                        # the subprocess acceptance test to assert)
+                        new_params = jax.device_get(state["params"])
+                        oi = {v: k for k, v in enumerate(active)}
+                        ni = {v: k for k, v in enumerate(new_active)}
+                        survivors = [v for v in new_active if v in oi]
+                        srows = [oi[v] for v in survivors]
+                        olds = jax.tree_util.tree_leaves(old_params)
+                        news = jax.tree_util.tree_leaves(new_params)
+                        ok_surv = all(
+                            np.array_equal(np.asarray(o)[oi[v]],
+                                           np.asarray(w)[ni[v]])
+                            for o, w in zip(olds, news) for v in survivors)
+                        ok_join = all(
+                            np.array_equal(
+                                np.asarray(o)[srows]
+                                .mean(axis=0, dtype=np.float64)
+                                .astype(np.asarray(o).dtype),
+                                np.asarray(w)[ni[v]])
+                            for o, w in zip(olds, news) for v in joined)
+                        msg += (f", survivors-bit-identical={ok_surv}, "
+                                f"joiners-at-consensus={ok_join}")
+                    print(msg, flush=True)
+                    active = new_active
                 if slot is not None and slot.version != built_version:
                     # hot-swap: re-lower the train step on the new plan
                     jstep = jax.jit(make_train_step(cfg, fed, opt, slot.plan,
@@ -289,8 +425,10 @@ def main() -> int:
                 else f"overlay {controller.overlay.name}")
         print(f"dynamic summary: {timeline.rounds_done} rounds in "
               f"{timeline.now_ms/1e3:.1f}s simulated, "
-              f"{len(controller.redesigns)} re-design(s), final {desc} "
-              f"(tau {controller.predicted_tau_ms:.1f} ms)")
+              f"{len(controller.redesigns)} re-design(s), "
+              f"{mem_slot.version} membership swap(s) "
+              f"({len(active)}/{underlay.num_silos} silos active), "
+              f"final {desc} (tau {controller.predicted_tau_ms:.1f} ms)")
     if args.checkpoint:
         from repro.checkpoint import save_checkpoint
 

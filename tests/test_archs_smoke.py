@@ -41,6 +41,9 @@ def test_reduced_forward_shapes_no_nan(arch_id):
     assert bool(jnp.isfinite(aux)), f"{arch_id}: NaN aux loss"
 
 
+@pytest.mark.slow  # train acceptance over the whole zoo (~5 min of the
+# tier-1 wall time): ci.sh --fast skips; the forward-shape smoke above
+# still covers every arch in the fast lane
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_reduced_train_step_decreases_loss(arch_id):
     cfg = get_config(arch_id).reduced()

@@ -20,6 +20,7 @@ import time
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, strategies as st
 
 import repro.core as C
 from repro.core.delays import TrainingParams, overlay_delay_matrix
@@ -37,11 +38,13 @@ from repro.dynamics import (
     DynamicTimeline,
     LinkDegraded,
     LinkFailed,
+    LinkRestored,
     OnlineTopologyController,
     Scenario,
     SiloJoin,
     SiloLeave,
     active_subgraph,
+    churn_scenario,
     design_best_overlay,
     design_best_schedule,
     link_failure_scenario,
@@ -120,6 +123,129 @@ def test_random_scenario_is_seed_deterministic():
     assert a.events == b.events
     c = random_scenario(u, Tc, seed=12, n_events=8)
     assert a.events != c.events
+
+
+def test_random_scenario_full_churn_pool_recovers():
+    """Regression: at ``p_churn=1.0`` the churn candidate pool must not
+    shrink monotonically — a silo whose scheduled rejoin has fired is
+    eligible to leave again, so long horizons produce more departures
+    than the universe could supply under the old always-grows ``away``
+    set (which capped SiloLeave events at N - 3 and starved churn into
+    stragglers), and every epoch keeps >= min_active silos."""
+    u, gc, tp, Tc = gaia_setup()
+    for seed in range(3):
+        sc = random_scenario(
+            u, Tc, seed=seed, horizon_ms=500_000.0, n_events=60, p_churn=1.0
+        )
+        leaves = [e for e in sc.events if isinstance(e, SiloLeave)]
+        joins = [e for e in sc.events if isinstance(e, SiloJoin)]
+        # every leave schedules its paired rejoin inside the horizon
+        assert len(leaves) == len(joins)
+        assert all(e.t_ms <= sc.horizon_ms for e in joins)
+        # pool recovery: strictly more departures than a monotone pool
+        # could ever emit (the old bug's hard cap)
+        assert len(leaves) > u.num_silos - 3
+        # some silo left, rejoined, and left again
+        assert max(
+            sum(1 for e in leaves if e.silo == v) for v in range(u.num_silos)
+        ) >= 2
+        # the active floor holds on every folded epoch
+        assert min(len(seg.active) for seg in sc.segments()) >= 3
+
+
+def test_link_restore_after_degrade_keeps_degradation():
+    """degrade -> fail -> restore: the decided semantics are
+    restore-to-degraded — LinkRestored undoes only the failure, the
+    degradation persists until an explicit LinkDegraded(factor=1.0)."""
+    u, gc, tp, Tc = gaia_setup()
+    link = tuple(sorted(u.core_edges[0]))
+    i, j = link
+    sc = Scenario(
+        name="dfr",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(
+            LinkDegraded(t_ms=1000.0, link=link, factor=0.25),
+            LinkFailed(t_ms=2000.0, link=link),
+            LinkRestored(t_ms=3000.0, link=link),
+            LinkDegraded(t_ms=4000.0, link=link, factor=1.0),
+        ),
+        horizon_ms=5000.0,
+    )
+    segs = sc.segments()
+    assert [s.t_start_ms for s in segs] == [0.0, 1000.0, 2000.0, 3000.0, 4000.0]
+    bw0 = segs[0].gc.available_bw_gbps[(i, j)]
+    lat0 = segs[0].gc.latency_ms[(i, j)]
+    # degraded: capacity scales, path unchanged
+    assert segs[1].gc.available_bw_gbps[(i, j)] == pytest.approx(0.25 * bw0)
+    assert segs[1].gc.latency_ms[(i, j)] == pytest.approx(lat0)
+    # failed: re-routed around the link
+    assert segs[2].gc.latency_ms[(i, j)] > lat0
+    # restored: the direct path is back, but STILL at the degraded
+    # capacity — restore undoes the failure, not the degradation
+    assert segs[3].gc.latency_ms[(i, j)] == pytest.approx(lat0)
+    assert segs[3].gc.available_bw_gbps[(i, j)] == pytest.approx(0.25 * bw0)
+    # only the explicit factor=1.0 degrade event returns full capacity
+    assert segs[4].gc.available_bw_gbps[(i, j)] == pytest.approx(bw0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_epoch_folding_under_membership_churn(data):
+    """Property: under arbitrary initially_inactive sets and interleaved
+    SiloJoin/SiloLeave streams, every folded epoch isolates its inactive
+    silos (no routed pairs touch them, zero computation time — so they
+    contribute no max-plus circuit), ``active_subgraph`` restriction
+    loses nothing, and epoch timestamps tile [0, inf) monotonically."""
+    u, gc, tp, Tc = gaia_setup()
+    n = u.num_silos
+    raw = data.draw(st.lists(st.integers(0, n - 1), max_size=n - 2))
+    init_inactive = tuple(sorted(set(raw)))[: n - 2]
+    active = set(range(n)) - set(init_inactive)
+    events = []
+    t = 0.0
+    for _ in range(data.draw(st.integers(0, 8))):
+        t += data.draw(st.floats(1.0, 500.0))
+        silo = data.draw(st.integers(0, n - 1))
+        if silo in active and len(active) > 1 and data.draw(st.booleans()):
+            events.append(SiloLeave(t_ms=t, silo=silo))
+            active.discard(silo)
+        else:  # join (idempotent when already active)
+            events.append(SiloJoin(t_ms=t, silo=silo))
+            active.add(silo)
+    sc = Scenario(
+        name="churn-prop",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=tuple(events),
+        horizon_ms=t + 1000.0,
+        initially_inactive=init_inactive,
+    )
+    segs = sc.segments()
+    # timestamps: start at 0, strictly increase, tile the half-line
+    starts = [s.t_start_ms for s in segs]
+    assert starts[0] == 0.0
+    assert all(a < b for a, b in zip(starts, starts[1:]))
+    assert all(
+        s.t_end_ms == nxt.t_start_ms for s, nxt in zip(segs, segs[1:])
+    )
+    assert segs[-1].t_end_ms == math.inf
+    # final epoch's active set matches the folded event stream
+    assert set(segs[-1].active) == active
+    for seg in segs:
+        inactive = set(range(n)) - set(seg.active)
+        for v in inactive:
+            # zero comp time: no self-loop circuit for inactive silos
+            assert seg.gc.silo_params[v].comp_time_ms == 0.0
+        # no routed pair touches an inactive silo
+        assert all(
+            not (set(e) & inactive) for e in seg.gc.latency_ms
+        )
+        # restriction to the active set is lossless (isolation)
+        sub = active_subgraph(seg.gc, seg.active)
+        assert set(sub.silos) == set(seg.active)
+        assert sub.latency_ms == seg.gc.latency_ms
+        assert sub.available_bw_gbps == seg.gc.available_bw_gbps
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +439,178 @@ def test_churn_redesign_with_plan_slot_does_not_crash():
     assert any("NOT swapped" in note for _, note in slot.history)
 
 
+def test_controller_membership_swaps_on_leave_and_rejoin():
+    """Elastic membership: with a membership provider + MembershipSlot
+    the controller reacts to SiloLeave/SiloJoin *immediately* (control
+    plane, not timing inference), publishes the new active set, and
+    resizes the plan slot across silo counts — no audit-note fallback."""
+    from repro.fed.gossip import MembershipSlot
+    from repro.fed.topology_runtime import plan_from_overlay
+
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    tau = ring.cycle_time_ms
+    sc = churn_scenario(
+        u, Tc, silo=5, t_leave_ms=20 * tau, t_rejoin_ms=50 * tau,
+        horizon_ms=200 * tau,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    mem = MembershipSlot(range(u.num_silos), u.num_silos)
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        config=ControllerConfig(seed=0, rewire_restarts=0),
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+        plan_slot=slot,
+        membership_slot=mem,
+        membership_provider=timeline.current_active,
+    )
+    redesigns = []
+    for _ in range(150):
+        rd = controller.observe_round(timeline.step())
+        if rd is not None:
+            redesigns.append(rd)
+            timeline.set_overlay(rd.overlay.edges)
+    churn_rds = [rd for rd in redesigns if rd.membership is not None]
+    assert len(churn_rds) == 2  # one per membership event, no extras
+    survivors = tuple(v for v in range(u.num_silos) if v != 5)
+    assert churn_rds[0].membership == survivors
+    assert churn_rds[0].plan.n_silos == u.num_silos - 1  # resized, not skipped
+    assert 5 not in {v for e in churn_rds[0].overlay.edges for v in e}
+    assert churn_rds[1].membership == tuple(range(u.num_silos))
+    assert churn_rds[1].plan.n_silos == u.num_silos
+    assert 5 in {v for e in churn_rds[1].overlay.edges for v in e}
+    # the membership slot versioned both swaps, the plan slot followed
+    assert mem.version == 2 and mem.active == tuple(range(u.num_silos))
+    assert slot.plan.n_silos == u.num_silos
+    assert not any("NOT swapped" in note for _, note in slot.history)
+
+
+def test_strike_redesign_never_resizes_plan_without_membership_swap():
+    """A MembershipSlot merely *existing* must not let a strike-triggered
+    (non-membership) redesign resize the plan across silo counts: without
+    a membership swap this actuation carries no rebuild signal, so the
+    cross-universe plan must take the audit-note path, and the
+    MembershipSlot must not have moved."""
+    from repro.fed.gossip import MembershipSlot
+    from repro.fed.topology_runtime import plan_from_overlay
+
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = Scenario(
+        name="churn",
+        underlay=u,
+        comp_time_ms=Tc,
+        events=(SiloLeave(t_ms=30 * ring.cycle_time_ms, silo=5),),
+        horizon_ms=200 * ring.cycle_time_ms,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    mem = MembershipSlot(range(u.num_silos), u.num_silos)
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        config=ControllerConfig(seed=0, rewire_restarts=0),
+        connectivity_provider=lambda: active_subgraph(
+            timeline.current_epoch().gc, timeline.current_epoch().active
+        ),
+        plan_slot=slot,
+        membership_slot=mem,  # note: no membership_provider
+    )
+    for _ in range(120):
+        redesign = controller.observe_round(timeline.step())
+        if redesign is not None:
+            timeline.set_overlay(redesign.overlay.edges)
+    assert len(controller.redesigns) >= 1
+    assert controller.redesigns[0].membership is None
+    assert mem.version == 0  # never swapped: no membership signal
+    assert slot.plan.n_silos == gc.num_silos  # plan NOT resized
+    assert any("NOT swapped" in note for _, note in slot.history)
+
+
+def test_controller_membership_without_connectivity_provider():
+    """With only a membership signal (no measurement service) the
+    controller must still design over exactly the published active set —
+    restricting its launch-time estimate on a leave, and growing back
+    from it on the rejoin — so the plan never disagrees with the
+    MembershipSlot."""
+    from repro.fed.gossip import MembershipSlot
+    from repro.fed.topology_runtime import plan_from_overlay
+
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    mem = MembershipSlot(range(u.num_silos), u.num_silos)
+    slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    membership = [tuple(range(u.num_silos))]
+    controller = OnlineTopologyController(
+        gc, tp, ring,
+        config=ControllerConfig(seed=0, rewire_restarts=0),
+        plan_slot=slot,
+        membership_slot=mem,
+        membership_provider=lambda: membership[0],
+    )
+    membership[0] = tuple(v for v in range(u.num_silos) if v != 5)
+    rd = controller.observe_round(ring.cycle_time_ms)
+    assert rd is not None and rd.membership == membership[0]
+    assert rd.plan.n_silos == u.num_silos - 1 == mem.n_active
+    assert 5 not in {v for e in rd.overlay.edges for v in e}
+    membership[0] = tuple(range(u.num_silos))
+    rd2 = controller.observe_round(ring.cycle_time_ms)
+    assert rd2 is not None and rd2.plan.n_silos == u.num_silos
+    assert slot.plan.n_silos == u.num_silos == mem.n_active
+
+
+@pytest.mark.slow
+def test_train_dynamic_random_churn_rebuilds_mesh_and_state():
+    """Acceptance: ``train.py --reduced --dynamic --scenario random`` with
+    ``p_churn > 0`` completes end-to-end; the mesh/state are rebuilt on a
+    SiloLeave and again on the paired SiloJoin, surviving silos'
+    parameters are bit-identical across every migration, and joiners
+    re-enter at the survivors' consensus average."""
+    import os
+    import re
+    import subprocess
+    import sys
+
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "internlm2-1.8b", "--reduced", "--dynamic",
+            "--scenario", "random", "--p-churn", "1.0",
+            "--scenario-seed", "0", "--verify-migration",
+            "--steps", "35", "--seq-len", "16", "--batch-per-silo", "2",
+        ],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env=env,
+    )
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-2000:]
+    swaps = re.findall(
+        r"membership v(\d+): (\d+) -> (\d+) silos \(left \[([\d, ]*)\], "
+        r"joined \[([\d, ]*)\]\)", out)
+    assert len(swaps) >= 2, out[-2000:]
+    leavers = {s for _, _, _, left, _ in swaps for s in left.split(", ") if s}
+    joiners = {s for _, _, _, _, jn in swaps for s in jn.split(", ") if s}
+    # mesh/state rebuilt on a SiloLeave AND again on the paired SiloJoin
+    assert leavers and (leavers & joiners), swaps
+    shrank = any(int(a) > int(b) for _, a, b, _, _ in swaps)
+    grew = any(int(a) < int(b) for _, a, b, _, _ in swaps)
+    assert shrank and grew, swaps
+    # every migration checked out: survivors bit-identical, joiners at
+    # the consensus average (verified in-process, asserted on the log)
+    rebuilds = re.findall(r"mesh\+state rebuilt, survivors-bit-identical="
+                          r"(\w+), joiners-at-consensus=(\w+)", out)
+    assert len(rebuilds) == len(swaps)
+    assert all(s == "True" and j == "True" for s, j in rebuilds), rebuilds
+    assert "membership swap(s)" in out
+
+
 def test_controller_is_quiet_on_a_healthy_network():
     u, gc, tp, Tc = gaia_setup()
     ring = C.design_overlay("ring", gc, tp)
@@ -362,6 +660,7 @@ def test_plan_slot_swap_contract():
 # Randomized schedules under dynamics
 
 
+@pytest.mark.slow  # Monte-Carlo schedule sweep: ci.sh --fast skips
 def test_schedule_epoch_estimates_track_the_drift():
     """Per-epoch pricing of a plan distribution: the degraded epoch's τ̄
     must exceed the healthy epoch's (the ROADMAP 'average cycle time of a
@@ -401,6 +700,7 @@ def test_dynamic_timeline_steps_a_randomized_schedule():
     assert durations == [timeline2.step() for _ in range(30)]
 
 
+@pytest.mark.slow  # Monte-Carlo schedule sweep: ci.sh --fast skips
 def test_controller_hot_swaps_to_randomized_schedule():
     """Acceptance: under schedule_family='matcha' a regression re-design
     re-fits the plan distribution and hot-swaps the ScheduleSlot from a
@@ -444,6 +744,7 @@ def test_controller_hot_swaps_to_randomized_schedule():
     assert timeline.step() > 0
 
 
+@pytest.mark.slow  # subprocess train acceptance: ci.sh --fast skips
 def test_train_dynamic_matcha_completes_hot_swap():
     """Acceptance: ``train.py --dynamic --designer matcha`` completes a
     controller hot-swap to a randomized schedule (traced-consensus step,

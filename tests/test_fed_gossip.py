@@ -14,6 +14,7 @@ import pytest
 from repro.fed.topology_runtime import plan_for_n_silos, plan_from_overlay
 
 
+@pytest.mark.slow  # subprocess train acceptance: ci.sh --fast skips
 def test_multi_device_fed_worker():
     script = os.path.join(os.path.dirname(__file__), "fed_worker.py")
     r = subprocess.run([sys.executable, script], capture_output=True,

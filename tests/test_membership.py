@@ -1,0 +1,257 @@
+"""Elastic silo membership: the fed-layer contracts.
+
+* :class:`MembershipSlot` — versioned active-set swaps (validation,
+  no-op on unchanged sets, callbacks);
+* :func:`migrate_silo_state` — gather → re-stack → re-shard invariants:
+  survivors bit-identical, leavers dropped, joiners at the survivors'
+  consensus average, shared leaves untouched;
+* :func:`masked_consensus` — renormalizing a consensus matrix over the
+  active silos (the traced-mask path of the ``consensus_arg`` step);
+* resizable :class:`PlanSlot`/:class:`ScheduleSlot` swaps;
+* :func:`save_silo_checkpoint` round-trip of a leaver's shard;
+* :class:`FederatedBatcher` stacking a silo-label subset.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.delays import TrainingParams
+from repro.fed.dpasgd import masked_consensus, migrate_silo_state
+from repro.fed.gossip import GossipPlan, MembershipSlot, PlanSlot, ScheduleSlot
+from repro.fed.topology_runtime import plan_from_overlay
+
+
+# ---------------------------------------------------------------------------
+# MembershipSlot
+
+
+def test_membership_slot_swap_contract():
+    slot = MembershipSlot(range(5), 5)
+    assert slot.active == (0, 1, 2, 3, 4)
+    assert slot.n_active == 5 and slot.n_universe == 5
+    seen = []
+    slot.on_swap(lambda active, version: seen.append((active, version)))
+    v = slot.swap((0, 1, 3, 4), label="silo 2 left")
+    assert v == 1 and slot.active == (0, 1, 3, 4)
+    assert seen == [((0, 1, 3, 4), 1)]
+    assert slot.history[-1] == (1, "silo 2 left")
+    # unchanged set (any order) is a no-op: version does not move
+    assert slot.swap((4, 3, 1, 0)) == 1 and slot.version == 1
+    v = slot.swap(range(5), label="silo 2 rejoined")
+    assert v == 2 and slot.active == (0, 1, 2, 3, 4)
+
+
+def test_membership_slot_rejects_bad_sets():
+    slot = MembershipSlot(range(4), 4)
+    with pytest.raises(ValueError):
+        slot.swap(())  # empty
+    with pytest.raises(ValueError):
+        slot.swap((0, 0, 1))  # duplicate
+    with pytest.raises(ValueError):
+        slot.swap((0, 4))  # outside the universe
+    with pytest.raises(ValueError):
+        MembershipSlot((-1, 0), 4)
+    assert slot.version == 0  # failed swaps leave the slot untouched
+
+
+# ---------------------------------------------------------------------------
+# State migration
+
+
+def _stacked_state(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": rng.standard_normal((n, 3, 2)).astype(np.float32),
+            "b": rng.standard_normal((n, 4)).astype(np.float32),
+        },
+        "opt_state": {"m": rng.standard_normal((n, 3, 2)).astype(np.float32)},
+        "step": np.asarray(7, np.int32),
+    }
+
+
+def test_migrate_drops_leaver_and_keeps_survivors_bit_identical():
+    state = _stacked_state(4)
+    new, joined, left = migrate_silo_state(state, (0, 1, 2, 3), (0, 1, 3))
+    assert joined == () and left == (2,)
+    assert new["params"]["w"].shape == (3, 3, 2)
+    for key in ("w", "b"):
+        old = state["params"][key]
+        assert np.array_equal(new["params"][key], old[[0, 1, 3]])
+    assert np.array_equal(new["opt_state"]["m"], state["opt_state"]["m"][[0, 1, 3]])
+    assert new["step"] == 7  # shared leaf passes through
+
+
+def test_migrate_initializes_joiner_at_survivors_consensus_average():
+    state = _stacked_state(4)
+    # silo 2 left earlier; now silo 4's label joins a 3-silo universe
+    shrunk, _, _ = migrate_silo_state(state, (0, 1, 2, 3), (0, 1, 3))
+    grown, joined, left = migrate_silo_state(shrunk, (0, 1, 3), (0, 1, 2, 3))
+    assert joined == (2,) and left == ()
+    for key in ("w", "b"):
+        old = shrunk["params"][key]
+        expect = old.mean(axis=0, dtype=np.float64).astype(old.dtype)
+        assert np.array_equal(grown["params"][key][2], expect)
+        # survivors stay bit-identical through the round trip
+        assert np.array_equal(grown["params"][key][[0, 1, 3]], old)
+
+
+def test_slice_silo_row_picks_mesh_position_of_label():
+    from repro.fed.dpasgd import slice_silo_row
+
+    state = _stacked_state(4)
+    row = slice_silo_row(state, (0, 2, 5, 7), 5)  # label 5 = mesh row 2
+    assert np.array_equal(row["params"]["w"], state["params"]["w"][2])
+    assert np.array_equal(row["opt_state"]["m"], state["opt_state"]["m"][2])
+    assert row["step"] == 7  # shared leaf passes through
+    with pytest.raises(ValueError):
+        slice_silo_row(state, (0, 2, 5, 7), 9)  # not an active label
+
+
+def test_migrate_requires_a_surviving_silo():
+    state = _stacked_state(3)
+    with pytest.raises(ValueError):
+        migrate_silo_state(state, (0, 1, 2), (3, 4))
+
+
+# ---------------------------------------------------------------------------
+# Masked consensus renormalization
+
+
+def ring_A(n):
+    from repro.core.consensus import ring_matrix
+
+    return ring_matrix(n, list(range(n)))
+
+
+def test_masked_consensus_full_mask_is_identity_transform():
+    A = ring_A(5)
+    out = np.asarray(masked_consensus(A, np.ones(5)))
+    np.testing.assert_allclose(out, A, atol=1e-7)
+
+
+def test_masked_consensus_renormalizes_over_survivors():
+    A = ring_A(4)  # silo i receives from i-1 and itself, weights 1/2 each
+    mask = np.array([1.0, 1.0, 0.0, 1.0])
+    out = np.asarray(masked_consensus(A, mask))
+    # every row is stochastic
+    np.testing.assert_allclose(out.sum(axis=1), np.ones(4), atol=1e-6)
+    # the inactive silo's row froze to identity (params untouched)
+    np.testing.assert_allclose(out[2], np.eye(4)[2], atol=1e-7)
+    # nothing mixes *from* the inactive silo
+    assert np.all(out[[0, 1, 3], 2] == 0.0)
+    # silo 3 received from the departed silo 2: that weight returns to
+    # its surviving in-neighbour set (here: itself), renormalized
+    np.testing.assert_allclose(out[3], np.eye(4)[3], atol=1e-7)
+    # silo 1 keeps its intact in-neighbourhood {0, 1} untouched
+    np.testing.assert_allclose(out[1], A[1], atol=1e-7)
+
+
+def test_masked_consensus_matches_submatrix_renormalization():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        n = int(rng.integers(3, 8))
+        A = rng.random((n, n)) + 0.1
+        A = A / A.sum(axis=1, keepdims=True)  # row-stochastic
+        keep = np.sort(rng.choice(n, size=int(rng.integers(2, n + 1)),
+                                  replace=False))
+        mask = np.zeros(n)
+        mask[keep] = 1.0
+        out = np.asarray(masked_consensus(A, mask))
+        sub = A[np.ix_(keep, keep)]
+        sub = sub / sub.sum(axis=1, keepdims=True)
+        np.testing.assert_allclose(out[np.ix_(keep, keep)], sub, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Resizable slots
+
+
+def gaia_overlays():
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=1)
+    from repro.dynamics import active_subgraph
+
+    full = C.design_overlay("ring", gc, tp)
+    active = tuple(v for v in gc.silos if v != 5)
+    sub = C.design_overlay("ring", active_subgraph(gc, active), tp)
+    return gc, full, sub, active
+
+
+def test_plan_slot_resize_requires_opt_in():
+    gc, full, sub, active = gaia_overlays()
+    slot = PlanSlot(plan_from_overlay(full, gc.num_silos))
+    small = plan_from_overlay(sub, len(active), silos=active)
+    with pytest.raises(ValueError):  # silent resize still rejected
+        slot.swap(small)
+    v = slot.swap(small, label="churn", allow_resize=True)
+    assert v == 1 and slot.plan.n_silos == len(active)
+    # and back up once the silo rejoins
+    slot.swap(plan_from_overlay(full, gc.num_silos), allow_resize=True)
+    assert slot.plan.n_silos == gc.num_silos
+
+
+def test_schedule_slot_resize_repins_silo_order():
+    gc, full, sub, active = gaia_overlays()
+    slot = ScheduleSlot(C.FixedSchedule(full), gc.num_silos, silos=gc.silos)
+    assert slot.plan.n_silos == gc.num_silos
+    v = slot.swap_schedule(C.FixedSchedule(sub), label="churn", silos=active)
+    assert v == 1 and slot.plan.n_silos == len(active)
+    A = slot.matrix_for_round(0)
+    assert A.shape == (len(active), len(active))
+    np.testing.assert_allclose(A.sum(axis=1), np.ones(len(active)), atol=1e-8)
+    with pytest.raises(ValueError):  # without silos= the resize is rejected
+        slot.swap_schedule(C.FixedSchedule(full))
+    # ... and the failed swap left the slot untouched and usable
+    assert slot.version == v and slot.plan.n_silos == len(active)
+    np.testing.assert_array_equal(slot.matrix_for_round(0), A)
+
+
+def test_schedule_slot_rolls_back_when_a_callback_raises():
+    gc, full, sub, active = gaia_overlays()
+    slot = ScheduleSlot(C.FixedSchedule(full), gc.num_silos, silos=gc.silos)
+    v0, plan0, hist0 = slot.version, slot.plan, list(slot.history)
+    A0 = slot.matrix_for_round(0)
+
+    @slot.on_swap
+    def boom(plan, version):
+        raise RuntimeError("consumer re-lower failed")
+
+    with pytest.raises(RuntimeError):
+        slot.swap_schedule(C.FixedSchedule(sub), silos=active)
+    # fully rolled back: plan, version, history AND the silo universe
+    assert slot.version == v0 and slot.plan is plan0
+    assert slot.history == hist0
+    np.testing.assert_array_equal(slot.matrix_for_round(0), A0)
+
+
+# ---------------------------------------------------------------------------
+# Leaver checkpoint + elastic batching
+
+
+def test_save_silo_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_silo_checkpoint
+
+    row = {"w": np.arange(6, dtype=np.float32).reshape(3, 2)}
+    path = save_silo_checkpoint(str(tmp_path), 7, row, step=42)
+    assert path.endswith("silo7_step42.msgpack")
+    back = load_checkpoint(path, {"w": np.zeros((3, 2), np.float32)})
+    np.testing.assert_array_equal(np.asarray(back["w"]), row["w"])
+
+
+def test_federated_batcher_stacks_silo_subset():
+    from repro.data import FederatedBatcher, SyntheticLMStream
+
+    stream = SyntheticLMStream(64, 8, n_silos=5)
+    batcher = FederatedBatcher(stream, local_steps=2, batch_per_silo=3)
+    full = batcher.batch(4)
+    sub = batcher.batch(4, silos=(3, 0))
+    assert sub["tokens"].shape == (2, 2, 3, 8)
+    # row k of the subset batch is silo label silos[k]'s own stream
+    np.testing.assert_array_equal(sub["tokens"][0], full["tokens"][3])
+    np.testing.assert_array_equal(sub["tokens"][1], full["tokens"][0])
+    with pytest.raises(ValueError):
+        batcher.batch(0, silos=(5,))

@@ -114,6 +114,7 @@ def test_connectivity_schedule_matches_legacy_oracle_with_local_steps():
     assert est.tau_ms == pytest.approx(legacy, rel=1e-6)
 
 
+@pytest.mark.slow  # Monte-Carlo schedule sweep: ci.sh --fast skips
 def test_batched_sweep_equals_per_schedule_pricing():
     u, gc, tp = gaia_setup()
     budgets = (0.2, 0.6, 1.0)
@@ -138,6 +139,7 @@ def test_schedule_estimate_confidence_interval():
     assert single.ci95_ms == 0.0
 
 
+@pytest.mark.slow  # Monte-Carlo schedule sweep: ci.sh --fast skips
 def test_budget_sweep_picks_the_smallest_mean_tau():
     u, gc, tp = gaia_setup()
     budgets = (0.2, 0.5, 1.0)
