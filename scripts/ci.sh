@@ -23,6 +23,11 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
     echo "WARN: could not install requirements-dev.txt;" \
          "property tests will use the compat-shim sweeps" >&2
 fi
+# Lint gate: project-invariant static checks (trace safety, RNG
+# discipline, NEG_INF sentinel, dtype discipline, engine contracts)
+# against the committed baseline.  Runs in --fast too: it is seconds.
+echo "== repro-lint =="
+python scripts/lint_repro.py
 # Docs gate first: the README quickstart must run as-is and docs/ must
 # not reference dead file paths (tests/test_readme_quickstart.py).
 echo "== docs gate =="

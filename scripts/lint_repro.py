@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""CLI for repro-lint.  Run from anywhere:
+
+    python scripts/lint_repro.py                 # lint src/ + tests/
+    python scripts/lint_repro.py --update-baseline
+    python scripts/lint_repro.py src/repro/core  # lint a subtree
+
+Exit 1 iff violations not covered by scripts/lint_baseline.txt exist.
+"""
+
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

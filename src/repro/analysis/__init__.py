@@ -1,0 +1,11 @@
+"""Static analysis and runtime-contract tooling for the repro project.
+
+Kept import-light: the engine modules import ``contracts`` at module
+load, so nothing here may pull in numpy/jax or the lint machinery.
+``repro.analysis.lint`` and ``repro.analysis.recompile`` are imported
+on demand by their consumers (``scripts/lint_repro.py``, tests).
+"""
+
+from .contracts import ContractError, contract, checking_enabled
+
+__all__ = ["contract", "ContractError", "checking_enabled"]

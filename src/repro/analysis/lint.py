@@ -1,0 +1,476 @@
+"""repro-lint: AST-based static checks for the project's invariants.
+
+The headline claims of this repo — bit-identical engine equivalence,
+deterministic MATCHA sampling, "sampled topologies never recompile" —
+rest on conventions nothing in CPython enforces: no host syncs inside
+jitted bodies, no ambient RNG state, no arithmetic on the ``NEG_INF``
+sentinel, f64-only bit-identity paths, and a shape contract on every
+engine entry point.  This module parses the tree once, shares a
+cross-file view of which functions are traced by jax, and runs each
+rule in ``repro.analysis.rules`` over every file.
+
+Grandfathering: ``scripts/lint_baseline.txt`` holds fingerprints of
+pre-existing violations.  Fingerprints are line-number independent
+(path, rule, enclosing function, stripped source line) so unrelated
+edits do not invalidate the baseline.  New violations fail the run;
+``--update-baseline`` rewrites the file.
+
+Inline suppression: append ``# repro-lint: ignore`` (or
+``ignore[rule-id]``) to the offending line.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["LintConfig", "Violation", "FileCtx", "Project", "lint_paths",
+           "lint_files", "lint_source", "load_baseline", "main"]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LintConfig:
+    """Project layout knobs consumed by the rules."""
+
+    # Modules whose loops/jitted bodies are throughput-critical: host
+    # syncs there are flagged.
+    hot_prefixes: Tuple[str, ...] = (
+        "src/repro/core/", "src/repro/fed/", "src/repro/dynamics/",
+        "src/repro/kernels/", "src/repro/launch/")
+    # The four engine modules: dtype-less constructions are flagged and
+    # every public function must carry a @contract.
+    engine_modules: Tuple[str, ...] = (
+        "src/repro/core/maxplus_vec.py",
+        "src/repro/core/maxplus_sparse.py",
+        "src/repro/core/delays.py",
+        "src/repro/core/schedule.py")
+    # The one module allowed to define the -inf sentinel.
+    sentinel_home: str = "src/repro/core/maxplus_vec.py"
+    sentinel_names: Tuple[str, ...] = ("NEG_INF", "_NEG_INF")
+    # Functions on the bit-identity consensus/migration path: any f32
+    # mention inside them is a violation.
+    bit_identity_funcs: Tuple[str, ...] = (
+        "migrate_silo_state", "masked_consensus")
+    # np.random attributes that thread explicit state and are allowed.
+    allowed_np_random: Tuple[str, ...] = (
+        "default_rng", "Generator", "SeedSequence", "BitGenerator",
+        "PCG64", "Philox")
+    # numpy attributes that are trace-time constants, not host syncs.
+    np_trace_constants: Tuple[str, ...] = (
+        "float16", "float32", "float64", "int8", "int16", "int32",
+        "int64", "uint8", "uint32", "bool_", "dtype", "newaxis", "pi",
+        "inf", "nan", "e", "ndarray", "integer", "floating", "shape",
+        "ndim")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str        # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    func: str        # enclosing qualname or "<module>"
+    line_text: str
+
+    def fingerprint(self) -> str:
+        return "::".join(
+            (self.path, self.rule, self.func, self.line_text.strip()))
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: [{self.rule}] "
+                f"{self.message}")
+
+
+@dataclass
+class Project:
+    """Cross-file facts shared with every rule."""
+
+    # Bare names passed to jax tracing combinators anywhere in the
+    # project: jit/vmap/pmap/grad/..., scan bodies, fori/while bodies.
+    traced_root_names: Set[str] = field(default_factory=set)
+
+
+@dataclass
+class FileCtx:
+    path: str
+    tree: ast.Module
+    lines: List[str]
+    config: LintConfig
+    project: Project
+    # node -> enclosing function qualname ("<module>" at top level)
+    func_of: Dict[ast.AST, str] = field(default_factory=dict)
+    # node -> innermost enclosing FunctionDef (None at module level)
+    def_of: Dict[ast.AST, Optional[ast.AST]] = field(default_factory=dict)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def violation(self, rule: str, node: ast.AST, message: str) -> Violation:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Violation(rule=rule, path=self.path, line=line, col=col,
+                         message=message,
+                         func=self.func_of.get(node, "<module>"),
+                         line_text=self.line_text(line))
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the rules
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'np.random.default_rng' for nested Attribute/Name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+_JIT_NAMES = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+              "checkpoint", "remat", "shard_map", "custom_vjp",
+              "custom_jvp"}
+
+
+def _is_jit_callee(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    if name is None:
+        return False
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf == "jit"
+
+
+def _traced_arg_positions(callee: str) -> Sequence[int]:
+    """Which positional args of this callee are traced callables."""
+    leaf = callee.rsplit(".", 1)[-1]
+    if leaf in _JIT_NAMES:
+        return (0,)
+    if leaf in ("scan", "associative_scan"):
+        return (0,)
+    if leaf == "map" and "." in callee:
+        return (0,)  # lax.map only — bare map() is the builtin
+    if leaf == "fori_loop":
+        return (2,)
+    if leaf == "while_loop":
+        return (0, 1)
+    if leaf in ("cond", "switch"):
+        return (1, 2, 3)
+    return ()
+
+
+def collect_traced_roots(tree: ast.Module) -> Set[str]:
+    """Bare function names handed to jax tracing combinators."""
+    roots: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func)
+            if callee is None:
+                continue
+            for pos in _traced_arg_positions(callee):
+                if pos < len(node.args) and isinstance(node.args[pos],
+                                                       ast.Name):
+                    roots.add(node.args[pos].id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _decorator_is_jit(dec):
+                    roots.add(node.name)
+    return roots
+
+
+def _decorator_is_jit(dec: ast.AST) -> bool:
+    if _is_jit_callee(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_callee(dec.func):
+            return True
+        # functools.partial(jax.jit, static_argnums=...)
+        callee = dotted_name(dec.func)
+        if callee and callee.rsplit(".", 1)[-1] == "partial":
+            return bool(dec.args) and _is_jit_callee(dec.args[0])
+    return False
+
+
+def traced_functions(ctx: FileCtx) -> Set[ast.AST]:
+    """FunctionDefs in this file that execute under jax tracing.
+
+    Seeds: defs whose name is a project-wide traced root, defs carrying
+    a jit decorator, and defs nested inside a traced def (their bodies
+    run at trace time).  Closure: defs called by bare name from an
+    already-traced def in the same file.
+    """
+    defs: List[ast.AST] = [n for n in ast.walk(ctx.tree)
+                           if isinstance(n, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))]
+    by_name: Dict[str, List[ast.AST]] = {}
+    for d in defs:
+        by_name.setdefault(d.name, []).append(d)
+    # Methods are passed to combinators as `self.f` (an Attribute), never
+    # by bare name — exclude them from name-based seeding or every method
+    # that shares a name with some scan body (`step`...) goes traced.
+    methods: Set[ast.AST] = {
+        d for cls in ast.walk(ctx.tree) if isinstance(cls, ast.ClassDef)
+        for d in cls.body
+        if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    traced: Set[ast.AST] = set()
+    for d in defs:
+        if d.name in ctx.project.traced_root_names and d not in methods:
+            traced.add(d)
+        elif any(_decorator_is_jit(dec) for dec in d.decorator_list):
+            traced.add(d)
+
+    def _mark_nested(d: ast.AST) -> None:
+        for child in ast.walk(d):
+            if child is not d and isinstance(child, (ast.FunctionDef,
+                                                     ast.AsyncFunctionDef)):
+                traced.add(child)
+
+    changed = True
+    while changed:
+        changed = False
+        for d in list(traced):
+            before = len(traced)
+            _mark_nested(d)
+            for node in ast.walk(d):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)):
+                    for cand in by_name.get(node.func.id, ()):
+                        traced.add(cand)
+            if len(traced) != before:
+                changed = True
+    return traced
+
+
+def body_nodes(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a FunctionDef body without descending into nested defs
+    (nested defs are analysed as their own traced functions)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*ignore(?:\[([\w\s,-]*)\])?")
+
+
+def _suppressed(ctx: FileCtx, v: Violation) -> bool:
+    m = _SUPPRESS_RE.search(ctx.line_text(v.line))
+    if not m:
+        return False
+    rules = m.group(1)
+    if rules is None:
+        return True
+    return v.rule in {r.strip() for r in rules.split(",") if r.strip()}
+
+
+def _build_maps(ctx: FileCtx) -> None:
+    def visit(node: ast.AST, qual: str, fn: Optional[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                child_qual = child.name if qual == "<module>" else (
+                    qual + "." + child.name)
+                ctx.func_of[child] = qual
+                ctx.def_of[child] = fn
+                visit(child, child_qual, child)
+            else:
+                if isinstance(child, ast.ClassDef):
+                    child_qual = child.name if qual == "<module>" else (
+                        qual + "." + child.name)
+                    ctx.func_of[child] = qual
+                    ctx.def_of[child] = fn
+                    visit(child, child_qual, fn)
+                else:
+                    ctx.func_of[child] = qual
+                    ctx.def_of[child] = fn
+                    visit(child, qual, fn)
+
+    visit(ctx.tree, "<module>", None)
+
+
+def _all_rules():
+    from .rules import ALL_RULES
+
+    return [cls() for cls in ALL_RULES]
+
+
+def _norm(path: str, root: Optional[str]) -> str:
+    if root:
+        try:
+            path = os.path.relpath(path, root)
+        except ValueError:
+            pass
+    return path.replace(os.sep, "/")
+
+
+def lint_files(files: Sequence[Tuple[str, str]],
+               config: Optional[LintConfig] = None) -> List[Violation]:
+    """Lint (path, source) pairs sharing one cross-file view."""
+    config = config or LintConfig()
+    project = Project()
+    ctxs: List[FileCtx] = []
+    violations: List[Violation] = []
+    for path, src in files:
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as exc:
+            violations.append(Violation(
+                rule="parse", path=path, line=exc.lineno or 1,
+                col=exc.offset or 0, message=f"syntax error: {exc.msg}",
+                func="<module>", line_text=""))
+            continue
+        ctx = FileCtx(path=path, tree=tree, lines=src.splitlines(),
+                      config=config, project=project)
+        _build_maps(ctx)
+        project.traced_root_names |= collect_traced_roots(tree)
+        ctxs.append(ctx)
+
+    rules = _all_rules()
+    for ctx in ctxs:
+        for rule in rules:
+            for v in rule.check(ctx):
+                if not _suppressed(ctx, v):
+                    violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations
+
+
+def lint_source(src: str, path: str = "snippet.py",
+                config: Optional[LintConfig] = None,
+                extra_files: Optional[Sequence[Tuple[str, str]]] = None,
+                ) -> List[Violation]:
+    """Lint one source string (the test-suite entry point)."""
+    files = list(extra_files or []) + [(path, src)]
+    return [v for v in lint_files(files, config) if v.path == path]
+
+
+def iter_py_files(paths: Sequence[str], root: Optional[str] = None,
+                  ) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fname in sorted(filenames):
+                if fname.endswith(".py"):
+                    out.append(os.path.join(dirpath, fname))
+    return out
+
+
+def lint_paths(paths: Sequence[str], root: Optional[str] = None,
+               config: Optional[LintConfig] = None) -> List[Violation]:
+    files = []
+    for fpath in iter_py_files(paths, root):
+        with open(fpath, "r", encoding="utf-8") as fh:
+            files.append((_norm(fpath, root), fh.read()))
+    return lint_files(files, config)
+
+
+# ---------------------------------------------------------------------------
+# Baseline + CLI
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> Set[str]:
+    if not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        return {line.rstrip("\n") for line in fh
+                if line.strip() and not line.startswith("#")}
+
+
+def write_baseline(path: str, violations: Sequence[Violation]) -> None:
+    fingerprints = sorted({v.fingerprint() for v in violations})
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("# repro-lint baseline: grandfathered violations.\n")
+        fh.write("# One line-number-independent fingerprint per line;\n")
+        fh.write("# regenerate with scripts/lint_repro.py"
+                 " --update-baseline.\n")
+        for fp in fingerprints:
+            fh.write(fp + "\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="lint_repro",
+        description="Project-invariant linter (trace safety, RNG, "
+                    "sentinel, dtype, contracts).")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src tests)")
+    parser.add_argument("--root", default=None,
+                        help="repo root for path normalisation "
+                             "(default: two levels above this file)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline file "
+                             "(default: scripts/lint_baseline.txt)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from this run")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report every violation, grandfathered "
+                             "or not")
+    args = parser.parse_args(argv)
+
+    root = args.root or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    paths = args.paths or [os.path.join(root, "src"),
+                           os.path.join(root, "tests")]
+    baseline_path = args.baseline or os.path.join(
+        root, "scripts", "lint_baseline.txt")
+
+    violations = lint_paths(paths, root=root)
+
+    if args.update_baseline:
+        write_baseline(baseline_path, violations)
+        print(f"wrote {len({v.fingerprint() for v in violations})} "
+              f"fingerprints to {baseline_path}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    fresh = [v for v in violations if v.fingerprint() not in baseline]
+    stale = baseline - {v.fingerprint() for v in violations}
+
+    for v in fresh:
+        print(v.render())
+    if fresh:
+        by_rule: Dict[str, int] = {}
+        for v in fresh:
+            by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
+        summary = ", ".join(f"{k}: {n}" for k, n in sorted(by_rule.items()))
+        print(f"repro-lint: {len(fresh)} new violation(s) ({summary}); "
+              f"{len(violations) - len(fresh)} grandfathered.")
+        return 1
+    grandfathered = len(violations)
+    msg = f"repro-lint: clean ({grandfathered} grandfathered)"
+    if stale:
+        msg += (f"; {len(stale)} baseline entr"
+                f"{'y is' if len(stale) == 1 else 'ies are'} stale — "
+                f"consider --update-baseline")
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

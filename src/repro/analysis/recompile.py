@@ -1,0 +1,52 @@
+"""Recompile guards: turn "compiles once" from a claim into an assert.
+
+``jax.jit`` retraces whenever it sees a new static signature — a dtype
+drift, a weak-type flip, a shape change, a new hashable static arg.
+Each retrace re-runs the Python body, so wrapping the *function being
+jitted* in :class:`TraceCounter` counts compilations directly, without
+reaching into jax cache internals (which move between versions):
+
+    counter = TraceCounter(step_fn)
+    jstep = jax.jit(counter)
+    ... run many rounds ...
+    assert counter.count == 1
+
+The MATCHA invariant from PR 4 — per-round sampled topologies feed a
+*traced* consensus matrix, so ``K`` rounds cost one compilation — is
+asserted in ``tests/test_recompile_guard.py`` using this helper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+__all__ = ["TraceCounter", "assert_max_traces"]
+
+
+class TraceCounter:
+    """Wrap a function so each *trace* (Python-body execution under
+    ``jax.jit``) increments ``count``.  Calls through an already
+    compiled executable do not re-enter Python, so after warmup the
+    count only moves on a retrace."""
+
+    def __init__(self, fn: Callable[..., Any], name: str = ""):
+        self.fn = fn
+        self.count = 0
+        self.name = name or getattr(fn, "__name__", "fn")
+        functools.update_wrapper(self, fn)
+
+    def __call__(self, *args, **kwargs):
+        self.count += 1
+        return self.fn(*args, **kwargs)
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+def assert_max_traces(counter: TraceCounter, limit: int = 1) -> None:
+    if counter.count > limit:
+        raise AssertionError(
+            f"'{counter.name}' traced {counter.count} times "
+            f"(limit {limit}): a static signature is varying across "
+            f"calls — check dtypes, weak types, shapes and static args")

@@ -1,0 +1,24 @@
+"""Rule registry for repro-lint.
+
+Each rule is a class with an ``id`` string and a
+``check(ctx: FileCtx) -> List[Violation]`` method.  Adding a rule means
+writing a module here and appending the class to ``ALL_RULES``.
+"""
+
+from .trace_safety import TraceSafetyRule
+from .rng_discipline import RngDisciplineRule
+from .sentinel import SentinelDisciplineRule
+from .dtype_discipline import DtypeDisciplineRule
+from .contracts_rule import EngineContractRule
+
+ALL_RULES = [
+    TraceSafetyRule,
+    RngDisciplineRule,
+    SentinelDisciplineRule,
+    DtypeDisciplineRule,
+    EngineContractRule,
+]
+
+__all__ = ["ALL_RULES", "TraceSafetyRule", "RngDisciplineRule",
+           "SentinelDisciplineRule", "DtypeDisciplineRule",
+           "EngineContractRule"]

@@ -1,0 +1,246 @@
+"""trace-safety: host syncs and Python control flow inside traced code.
+
+A ``float()``/``.item()``/``np.*`` call on a traced value inside a
+``jax.jit``/``lax.scan``/``lax.fori_loop`` body either fails at trace
+time or — worse — silently constant-folds a value that should be
+data-dependent.  Python ``if``/``while`` on a tracer raises a
+concretization error only on the untested branch shape.  This rule
+also carries two heuristic facets for host-side hot loops:
+per-iteration scalar syncs, and unbatched device→host transfers that
+should be one ``jax.device_get``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from ..lint import (FileCtx, Violation, body_nodes, dotted_name,
+                    traced_functions)
+
+RULE_ID = "trace-safety"
+
+_KNOWN_SRC_PREFIXES = ("src/", "tests/", "benchmarks/", "scripts/",
+                       "examples/", "docs/")
+
+
+def in_hot_path(ctx: FileCtx) -> bool:
+    """Hot modules per config; bare snippets (tests) count as hot."""
+    if ctx.path.startswith(ctx.config.hot_prefixes):
+        return True
+    return not ctx.path.startswith(_KNOWN_SRC_PREFIXES)
+
+
+def _is_np(name: str) -> bool:
+    return name in ("np", "numpy")
+
+
+def _base_name(node: ast.AST) -> str:
+    """Leftmost Name of an expression like ``a[i].b`` -> 'a'."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+class TraceSafetyRule:
+    id = RULE_ID
+
+    def check(self, ctx: FileCtx) -> List[Violation]:
+        if not in_hot_path(ctx):
+            return []
+        out: List[Violation] = []
+        traced = traced_functions(ctx)
+        for fn in traced:
+            out.extend(self._check_traced_body(ctx, fn))
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_unbatched_transfers(ctx, node))
+                if node not in traced:
+                    out.extend(self._check_loop_syncs(ctx, node))
+        return out
+
+    # -- facet 1+2+3: inside traced bodies ---------------------------------
+
+    def _check_traced_body(self, ctx: FileCtx, fn: ast.AST
+                           ) -> List[Violation]:
+        out: List[Violation] = []
+        params = _param_names(fn)
+        for node in body_nodes(fn):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_call_in_trace(ctx, fn, node))
+            elif isinstance(node, (ast.If, ast.While)):
+                bad = _tracer_names_in_test(node.test, params)
+                if bad:
+                    names = ", ".join(sorted(bad))
+                    out.append(ctx.violation(
+                        self.id, node,
+                        f"Python branch on possibly-traced value(s) "
+                        f"{names} inside traced function "
+                        f"'{fn.name}'; use jnp.where/lax.cond or hoist "
+                        f"the decision out of the traced body"))
+        return out
+
+    def _check_call_in_trace(self, ctx: FileCtx, fn: ast.AST,
+                             node: ast.Call) -> List[Violation]:
+        out: List[Violation] = []
+        callee = node.func
+        if isinstance(callee, ast.Name):
+            if callee.id in ("float", "bool") and node.args and \
+                    not isinstance(node.args[0], ast.Constant):
+                out.append(ctx.violation(
+                    self.id, node,
+                    f"{callee.id}() on a non-constant inside traced "
+                    f"function '{fn.name}' forces a host sync (or a "
+                    f"concretization error); keep the value on device"))
+            elif callee.id == "int" and node.args and isinstance(
+                    node.args[0], (ast.Subscript, ast.Call)):
+                out.append(ctx.violation(
+                    self.id, node,
+                    f"int() on a computed value inside traced function "
+                    f"'{fn.name}' is a host sync; static ints should "
+                    f"arrive as arguments"))
+        elif isinstance(callee, ast.Attribute):
+            if callee.attr in ("item", "tolist") and not node.args:
+                out.append(ctx.violation(
+                    self.id, node,
+                    f".{callee.attr}() inside traced function "
+                    f"'{fn.name}' is a host sync"))
+            else:
+                name = dotted_name(callee)
+                if name and "." in name:
+                    base, leaf = name.split(".", 1)
+                    if _is_np(base) and "." not in leaf and \
+                            leaf not in ctx.config.np_trace_constants:
+                        out.append(ctx.violation(
+                            self.id, node,
+                            f"np.{leaf}(...) inside traced function "
+                            f"'{fn.name}' executes on host at trace "
+                            f"time; use jnp.{leaf} so it stays in the "
+                            f"traced graph"))
+        return out
+
+    # -- facet 4: per-iteration scalar syncs in host loops -----------------
+
+    def _check_loop_syncs(self, ctx: FileCtx, fn: ast.AST
+                          ) -> List[Violation]:
+        out: List[Violation] = []
+        for node in body_nodes(fn):
+            if not isinstance(node, (ast.For, ast.While)):
+                continue
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                flagged = None
+                if isinstance(sub.func, ast.Name) and \
+                        sub.func.id == "float" and sub.args and \
+                        not isinstance(sub.args[0], ast.Constant):
+                    flagged = "float(...)"
+                elif isinstance(sub.func, ast.Attribute):
+                    if sub.func.attr == "item" and not sub.args:
+                        flagged = ".item()"
+                    else:
+                        name = dotted_name(sub.func)
+                        if name in ("np.asarray", "numpy.asarray"):
+                            flagged = "np.asarray(...)"
+                if flagged:
+                    out.append(ctx.violation(
+                        self.id, sub,
+                        f"{flagged} inside a loop in hot function "
+                        f"'{fn.name}': a per-iteration device→host "
+                        f"sync if the operand lives on device; batch "
+                        f"the transfer outside the loop (baseline it "
+                        f"if the operand is host-only)"))
+        return out
+
+    # -- facet 5: unbatched device→host transfers --------------------------
+
+    def _check_unbatched_transfers(self, ctx: FileCtx, fn: ast.AST
+                                   ) -> List[Violation]:
+        out: List[Violation] = []
+        stmts = list(body_nodes(fn))
+        groups: List[tuple] = []  # (assign_node, {names})
+        for node in stmts:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Tuple) \
+                    and isinstance(node.value, ast.Call):
+                names = {elt.id for elt in node.targets[0].elts
+                         if isinstance(elt, ast.Name)}
+                if len(names) >= 2:
+                    groups.append((node, names))
+        if not groups:
+            return out
+        sync_counts: Dict[int, Set[str]] = {i: set()
+                                            for i in range(len(groups))}
+        for node in stmts:
+            if not isinstance(node, ast.Call):
+                continue
+            target = None
+            callee = dotted_name(node.func)
+            if callee in ("np.asarray", "numpy.asarray", "np.array",
+                          "numpy.array", "np.copy", "numpy.copy") \
+                    and node.args:
+                target = _base_name(node.args[0])
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id == "float" and node.args:
+                target = _base_name(node.args[0])
+            if not target:
+                continue
+            for i, (assign, names) in enumerate(groups):
+                if target in names and node.lineno > assign.lineno:
+                    sync_counts[i].add(target)
+        for i, (assign, names) in enumerate(groups):
+            hit = sync_counts[i]
+            if len(hit) >= 2:
+                out.append(ctx.violation(
+                    self.id, assign,
+                    f"{len(hit)} separate host transfers "
+                    f"({', '.join(sorted(hit))}) from one device "
+                    f"computation in '{fn.name}'; fetch them together "
+                    f"with a single jax.device_get((...))"))
+        return out
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    args = fn.args
+    names = {a.arg for a in args.args + args.kwonlyargs
+             + getattr(args, "posonlyargs", [])}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names
+
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_EXEMPT_CALLS = {"len", "isinstance", "getattr", "hasattr", "callable"}
+
+
+def _tracer_names_in_test(test: ast.AST, params: Set[str]) -> Set[str]:
+    """Param names used as values (not via shape/ndim/len) in a branch
+    test.  ``is None`` / ``is not None`` comparisons are exempt."""
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return set()
+
+    offending: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return  # x.shape[...] is static under trace
+        if isinstance(node, ast.Call):
+            fname = node.func.id if isinstance(node.func, ast.Name) else ""
+            if fname in _EXEMPT_CALLS:
+                return
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return
+        if isinstance(node, ast.Name) and node.id in params:
+            offending.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(test)
+    return offending

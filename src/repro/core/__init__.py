@@ -28,6 +28,8 @@ from .maxplus import (
     strongly_connected_components,
 )
 from .maxplus_vec import (
+    NEG_INF,
+    missing_mask,
     batched_cycle_time,
     batched_cycle_time_jax,
     batched_is_strongly_connected,

@@ -20,6 +20,7 @@ from typing import Dict, Hashable, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.contracts import contract
 from .maxplus import DelayDigraph
 from .maxplus_vec import NEG_INF
 
@@ -72,6 +73,7 @@ class TrainingParams:
     local_steps: int = 1  # s
 
 
+@contract()
 def effective_rate_gbps(
     gc: ConnectivityGraph,
     i: Node,
@@ -85,6 +87,7 @@ def effective_rate_gbps(
     return min(up, dn, gc.available_bw_gbps[(i, j)])
 
 
+@contract()
 def edge_delay_ms(
     gc: ConnectivityGraph,
     tp: TrainingParams,
@@ -102,6 +105,7 @@ def edge_delay_ms(
     )
 
 
+@contract()
 def connectivity_delay_ms(gc: ConnectivityGraph, tp: TrainingParams, i: Node, j: Node) -> float:
     """d_c(i,j) = s*T_c(i) + l(i,j) + M/A(i',j') — the *edge-capacitated*
     delay used to weigh the connectivity graph for topology design."""
@@ -112,11 +116,13 @@ def connectivity_delay_ms(gc: ConnectivityGraph, tp: TrainingParams, i: Node, j:
     )
 
 
+@contract()
 def symmetrized_delay_ms(gc: ConnectivityGraph, tp: TrainingParams, i: Node, j: Node) -> float:
     """d_c^(u)(i,j) = (d_c(i,j) + d_c(j,i)) / 2 (Prop. 3.1)."""
     return 0.5 * (connectivity_delay_ms(gc, tp, i, j) + connectivity_delay_ms(gc, tp, j, i))
 
 
+@contract()
 def node_capacitated_sym_delay_ms(
     gc: ConnectivityGraph, tp: TrainingParams, i: Node, j: Node
 ) -> float:
@@ -134,6 +140,7 @@ def node_capacitated_sym_delay_ms(
     )
 
 
+@contract()
 def overlay_delay_digraph(
     gc: ConnectivityGraph,
     tp: TrainingParams,
@@ -162,6 +169,7 @@ def overlay_delay_digraph(
     return DelayDigraph(tuple(gc.silos), delays)
 
 
+@contract(ret="[N,N]")
 def overlay_delay_matrix(
     gc: ConnectivityGraph,
     tp: TrainingParams,
@@ -181,6 +189,7 @@ def overlay_delay_matrix(
     return batched_overlay_delay_matrices(gc, tp, arcs, masks)[0]
 
 
+@contract(None, None, "#E", "[B,E]", ret="[B,N,N]")
 def batched_overlay_delay_matrices(
     gc: ConnectivityGraph,
     tp: TrainingParams,
@@ -233,6 +242,7 @@ def batched_overlay_delay_matrices(
     return W
 
 
+@contract()
 def is_edge_capacitated(gc: ConnectivityGraph) -> bool:
     """Sufficient condition from Sect. 3.1:
     min(C_UP(i), C_DN(j)) / N >= A(i',j') for every connectivity edge."""

@@ -32,11 +32,10 @@ from typing import Dict, Hashable, Iterable, List, Mapping, Optional, Sequence, 
 import numpy as np
 
 from . import maxplus_vec as _vec
+from .maxplus_vec import NEG_INF, missing_mask
 
 Node = Hashable
 Edge = Tuple[Node, Node]
-
-_NEG_INF = float("-inf")
 
 
 @dataclass(frozen=True)
@@ -97,7 +96,7 @@ def max_cycle_mean_legacy(graph: DelayDigraph) -> float:
     comp_means = [
         _karp_scc(graph, scc) for scc in strongly_connected_components(graph)
     ]
-    return max(comp_means, default=_NEG_INF)
+    return max(comp_means, default=NEG_INF)
 
 
 def _karp_scc(graph: DelayDigraph, scc: Sequence[Node]) -> float:
@@ -105,7 +104,7 @@ def _karp_scc(graph: DelayDigraph, scc: Sequence[Node]) -> float:
     index = {v: k for k, v in enumerate(nodes)}
     n = len(nodes)
     if n == 0:
-        return _NEG_INF
+        return NEG_INF
     # Collect intra-SCC edges (including self loops).
     edges = [
         (index[i], index[j], w)
@@ -113,26 +112,26 @@ def _karp_scc(graph: DelayDigraph, scc: Sequence[Node]) -> float:
         if i in index and j in index
     ]
     if not edges:
-        return _NEG_INF
+        return NEG_INF
     # D[k][v] = max weight of a walk with exactly k edges from source to v.
     src = 0
-    D = [[_NEG_INF] * n for _ in range(n + 1)]
+    D = [[NEG_INF] * n for _ in range(n + 1)]
     D[0][src] = 0.0
     for k in range(1, n + 1):
         row_prev, row = D[k - 1], D[k]
         for (u, v, w) in edges:
-            if row_prev[u] != _NEG_INF:
+            if row_prev[u] != NEG_INF:
                 cand = row_prev[u] + w
                 if cand > row[v]:
                     row[v] = cand
-    best = _NEG_INF
+    best = NEG_INF
     for v in range(n):
-        if D[n][v] == _NEG_INF:
+        if D[n][v] == NEG_INF:
             continue
         # min over k of (D_n - D_k) / (n - k)
         worst = math.inf
         for k in range(n):
-            if D[k][v] == _NEG_INF:
+            if D[k][v] == NEG_INF:
                 continue
             worst = min(worst, (D[n][v] - D[k][v]) / (n - k))
         if worst != math.inf:
@@ -209,7 +208,7 @@ def cycle_time(graph: DelayDigraph) -> float:
 def throughput(graph: DelayDigraph) -> float:
     """Communication rounds per time unit = 1 / tau."""
     tau = cycle_time(graph)
-    if tau <= 0 or tau == _NEG_INF:
+    if tau <= 0 or missing_mask(tau):
         return math.inf
     return 1.0 / tau
 
@@ -279,7 +278,7 @@ def critical_circuit(graph: DelayDigraph) -> Tuple[float, List[Node]]:
     tau, circuit = _vec.critical_circuit_dense(W)
     if circuit:
         return tau, [nodes[c] for c in circuit]
-    if tau == _NEG_INF:
+    if missing_mask(tau):
         return tau, []
     return critical_circuit_legacy(graph)  # numerically degenerate fallback
 
@@ -293,7 +292,7 @@ def critical_circuit_legacy(graph: DelayDigraph) -> Tuple[float, List[Node]]:
     subgraph for a zero-reduced-mean cycle.
     """
     tau = max_cycle_mean(graph)
-    if tau == _NEG_INF:
+    if tau == NEG_INF:
         return tau, []
     nodes = list(graph.nodes)
     idx = {v: k for k, v in enumerate(nodes)}

@@ -59,7 +59,8 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .maxplus_vec import NEG_INF, karp_from_levels
+from ..analysis.contracts import contract
+from .maxplus_vec import NEG_INF, karp_from_levels, missing_mask
 
 Arc = Tuple[int, int]
 
@@ -96,6 +97,7 @@ class EdgeBatch(NamedTuple):
         return self.src.shape[1]
 
 
+@contract("[B,N,N]|[N,N]", ret="eb[B,E,N]")
 def dense_to_edge_batch(W: np.ndarray, e_max: Optional[int] = None) -> EdgeBatch:
     """Convert a dense ``[B, N, N]`` (or ``[N, N]``) weight stack to a
     padded :class:`EdgeBatch`.
@@ -123,6 +125,7 @@ def dense_to_edge_batch(W: np.ndarray, e_max: Optional[int] = None) -> EdgeBatch
     return EdgeBatch(src, dst, w, N)
 
 
+@contract("eb[B,E,N]", ret="[B,N,N]")
 def edge_batch_to_dense(eb: EdgeBatch) -> np.ndarray:
     """Inverse of :func:`dense_to_edge_batch`: ``[B, N, N]`` with ``-inf``
     holes.  Duplicate arcs keep their max weight (max-plus semantics)."""
@@ -181,6 +184,7 @@ def _dst_segments(eb: EdgeBatch) -> _Segments:
 # Batched Karp (numpy)
 
 
+@contract("eb[B,E,N]", ret="[B]")
 def batched_cycle_time_sparse(
     eb: EdgeBatch,
     *,
@@ -246,6 +250,7 @@ def _sparse_karp_chunk(eb: EdgeBatch, dtype: np.dtype) -> np.ndarray:
     return karp_from_levels(D)
 
 
+@contract("#E", "#E", "#E", "N")
 def cycle_time_sparse(
     src: Sequence[int], dst: Sequence[int], w: Sequence[float], num_nodes: int
 ) -> float:
@@ -263,6 +268,7 @@ def cycle_time_sparse(
 # Batched Karp (JAX)
 
 
+@contract("[B,E]", "[B,E]", "[B,E]", "N", ret="[B]")
 def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int):
     """Jittable JAX version of :func:`batched_cycle_time_sparse`.
 
@@ -314,6 +320,7 @@ def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int):
 # Timing recursion (Eq. 4) over edge lists
 
 
+@contract("eb[B,E,N]", "R", "*[B,N]", ret="[B,R+1,N]")
 def batched_timing_recursion_sparse(
     eb: EdgeBatch, num_rounds: int, t0: Optional[np.ndarray] = None
 ) -> np.ndarray:
@@ -362,6 +369,7 @@ def batched_timing_recursion_sparse(
     return out
 
 
+@contract("[E]", "[E]", "[U,E]", "[C,R]", "N", "*[C,N]", ret="[C,R+1,N]")
 def timing_recursion_unique_rounds_sparse(
     src: np.ndarray,
     dst: np.ndarray,
@@ -474,6 +482,7 @@ def timing_recursion_unique_rounds_sparse(
     return out
 
 
+@contract("[E]", "[E]", "[C,R,E]", "N", "*[C,N]", ret="[C,R+1,N]")
 def timing_recursion_time_varying_sparse(
     src: np.ndarray,
     dst: np.ndarray,
@@ -502,6 +511,7 @@ def timing_recursion_time_varying_sparse(
     )
 
 
+@contract("[E]", "[E]", "[C,R,E]", "N", "*[C,N]", ret="[C,R+1,N]")
 def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=None):
     """Jittable JAX twin of :func:`timing_recursion_time_varying_sparse`.
 
@@ -543,6 +553,7 @@ def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=Non
 # Reachability / SCC over edge lists
 
 
+@contract("eb[B,E,N]", ret="[B,N]")
 def reachable_from_sparse(eb: EdgeBatch, start: int = 0) -> np.ndarray:
     """``[B, N]`` bool: vertices reachable from ``start`` (inclusive) by
     the present arcs of each graph.  Frontier propagation to a fixed
@@ -568,6 +579,7 @@ def _reversed_batch(eb: EdgeBatch) -> EdgeBatch:
     return EdgeBatch(eb.dst, eb.src, eb.w, eb.num_nodes)
 
 
+@contract("eb[B,E,N]", ret="[B]")
 def batched_is_strongly_connected_sparse(eb: EdgeBatch) -> np.ndarray:
     """``[B]`` bool: is each edge-list graph strongly connected?
 
@@ -581,6 +593,7 @@ def batched_is_strongly_connected_sparse(eb: EdgeBatch) -> np.ndarray:
     return np.all(fwd & bwd, axis=1)
 
 
+@contract("[E]", "[E]", "N", ret="[N]")
 def scc_labels_sparse(
     src: np.ndarray, dst: np.ndarray, num_nodes: int
 ) -> np.ndarray:
@@ -618,6 +631,7 @@ def scc_labels_sparse(
         ncomp += 1
 
 
+@contract("[E]", "[E]", "[E]", "N")
 def critical_circuit_sparse(
     src: np.ndarray,
     dst: np.ndarray,
@@ -653,14 +667,14 @@ def critical_circuit_sparse(
                 )
             )[0]
         )
-    if tau == NEG_INF or N == 0:
+    if missing_mask(tau) or N == 0:
         return NEG_INF, []
     present = w > NEG_INF
     s, d = src[present], dst[present]
     wr = w[present] - tau
     eps = 1e-9 * max(1.0, abs(tau))
     seg = _segments_by(d)
-    pot = np.zeros(N)
+    pot = np.zeros(N, dtype=np.float64)
     for _ in range(N):
         cand = _segment_max(pot[s] + wr, seg, N, np.float64)
         nxt = np.maximum(pot, cand)
@@ -730,6 +744,7 @@ def _reach_one(
 
 
 
+@contract(None, None, "#E", "[B,E]", ret="eb[B,E+N,N]")
 def batched_overlay_delay_edges(gc, tp, arcs: Sequence[Arc], masks) -> EdgeBatch:
     """Eq. 3 delay *edge lists* for a batch of candidate overlays.
 

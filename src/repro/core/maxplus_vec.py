@@ -53,10 +53,26 @@ from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.contracts import contract
+
 Node = Hashable
 Edge = Tuple[Node, Node]
 
 NEG_INF = float("-inf")
+
+
+@contract()
+def missing_mask(x) -> np.ndarray:
+    """Boolean mask of *absent* arcs: True where ``x`` carries the
+    ``NEG_INF`` sentinel.
+
+    The one sanctioned way to test for the sentinel.  Raw ``== NEG_INF``
+    comparisons are flagged by ``scripts/lint_repro.py``: they read as a
+    value test, and an f32 pipeline can *manufacture* -inf by overflow,
+    at which point equality silently reclassifies a real arc as padding.
+    Works on scalars and arrays alike (``np.isneginf``).
+    """
+    return np.isneginf(x)
 
 # Above this vertex count the boolean matrix-power closure (O(N^3 log N)
 # bits) loses to iterative Tarjan (O(N + E)).
@@ -74,6 +90,7 @@ _DP_CACHE_BYTES = 2 << 20
 # Graph <-> matrix conversion
 
 
+@contract(None, "#N", ret="[N,N]")
 def edges_to_matrix(
     delays: Mapping[Edge, float], nodes: Sequence[Node]
 ) -> np.ndarray:
@@ -85,6 +102,7 @@ def edges_to_matrix(
     return W
 
 
+@contract()
 def graph_to_matrix(graph) -> Tuple[np.ndarray, Tuple[Node, ...]]:
     """Convert a :class:`repro.core.maxplus.DelayDigraph` to (W, nodes)."""
     return edges_to_matrix(graph.delays, graph.nodes), tuple(graph.nodes)
@@ -94,6 +112,7 @@ def graph_to_matrix(graph) -> Tuple[np.ndarray, Tuple[Node, ...]]:
 # Batched Karp
 
 
+@contract("[B,N,N]|[N,N]", ret="[B]|[]")
 def batched_cycle_time(
     weights: np.ndarray,
     *,
@@ -165,6 +184,7 @@ def _karp_chunk(W: np.ndarray) -> np.ndarray:
     return karp_from_levels(D)
 
 
+@contract("[N+1,B,N]", ret="[B]")
 def karp_from_levels(D: np.ndarray) -> np.ndarray:
     """Karp's formula from a precomputed multi-source DP table.
 
@@ -185,15 +205,17 @@ def karp_from_levels(D: np.ndarray) -> np.ndarray:
     np.nan_to_num(ratios, copy=False, nan=np.inf)
     mins = np.min(ratios, axis=0)  # [B, N]
     # Vertices with no N-arc walk do not certify any cycle.
-    mins = np.where(Dn == NEG_INF, NEG_INF, mins)
+    mins = np.where(missing_mask(Dn), NEG_INF, mins)
     return np.max(mins, axis=1)
 
 
+@contract("[N,N]")
 def cycle_time_dense(W: np.ndarray) -> float:
     """Max cycle mean of a single dense weight matrix."""
     return float(batched_cycle_time(np.asarray(W, dtype=np.float64)))
 
 
+@contract("[B,N,N]|[N,N]", ret="[_]")
 def batched_throughput(weights: np.ndarray) -> np.ndarray:
     """1 / tau per graph (inf where tau <= 0 or the graph is acyclic)."""
     tau = np.atleast_1d(batched_cycle_time(weights))
@@ -207,6 +229,7 @@ def batched_throughput(weights: np.ndarray) -> np.ndarray:
 # JAX variant
 
 
+@contract("[B,N,N]", ret="[B]")
 def batched_cycle_time_jax(weights):
     """Jittable JAX version of :func:`batched_cycle_time`.
 
@@ -242,6 +265,7 @@ def batched_cycle_time_jax(weights):
 # Reachability / SCC
 
 
+@contract("[...,N,N]", ret="[...,N,N]")
 def reachability_closure(adj: np.ndarray) -> np.ndarray:
     """Reflexive-transitive closure of boolean adjacency ``[..., N, N]``.
 
@@ -259,6 +283,7 @@ def reachability_closure(adj: np.ndarray) -> np.ndarray:
     return R
 
 
+@contract("[B,N,N]|[N,N]", ret="[B]|[]")
 def batched_is_strongly_connected(weights: np.ndarray) -> np.ndarray:
     """``[B]`` bool: is each graph (arcs where weight > -inf) strong?
 
@@ -277,6 +302,7 @@ def batched_is_strongly_connected(weights: np.ndarray) -> np.ndarray:
     return ok[0] if single else ok
 
 
+@contract("[N,N]", ret="[N]")
 def scc_labels(adj: np.ndarray, *, dense_threshold: int = _DENSE_SCC_THRESHOLD) -> np.ndarray:
     """Component label per vertex (vertices share a label iff mutually
     reachable).  Matrix-power closure for small N, Tarjan for large N."""
@@ -346,6 +372,7 @@ def _tarjan_labels(A: np.ndarray) -> np.ndarray:
 # Timing recursion (Eq. 4) on dense state
 
 
+@contract("[N,N]", "R", "*[N]", ret="[R+1,N]")
 def timing_recursion_dense(
     W: np.ndarray, num_rounds: int, t0: Optional[np.ndarray] = None
 ) -> np.ndarray:
@@ -363,6 +390,7 @@ def timing_recursion_dense(
     return out[0]
 
 
+@contract("[B,N,N]", "R", "*[B,N]", ret="[B,R+1,N]")
 def batched_timing_recursion(
     W: np.ndarray, num_rounds: int, t0: Optional[np.ndarray] = None
 ) -> np.ndarray:
@@ -372,8 +400,9 @@ def batched_timing_recursion(
     Weff = W.copy()
     idx = np.arange(N)
     diag = Weff[:, idx, idx]
-    Weff[:, idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
-    t = np.zeros((B, N)) if t0 is None else np.asarray(t0, dtype=np.float64).copy()
+    Weff[:, idx, idx] = np.where(missing_mask(diag), 0.0, diag)
+    t = (np.zeros((B, N), dtype=np.float64) if t0 is None
+         else np.asarray(t0, dtype=np.float64).copy())
     out = np.empty((B, num_rounds + 1, N), dtype=np.float64)
     out[:, 0] = t
     for k in range(num_rounds):
@@ -383,6 +412,7 @@ def batched_timing_recursion(
     return out
 
 
+@contract("[N,N]", "R")
 def empirical_cycle_time_dense(W: np.ndarray, num_rounds: int = 200) -> float:
     """Estimate tau from the slope of the dense recursion tail."""
     t = timing_recursion_dense(W, num_rounds)
@@ -409,6 +439,7 @@ def _epoch_of(starts: np.ndarray, t: np.ndarray) -> np.ndarray:
     return np.clip(e, 0, starts.shape[-1] - 1)
 
 
+@contract("[E,N,N]", "[E]", "R", "*[N]", ret="[R+1,N]")
 def timing_recursion_piecewise(
     Ws: np.ndarray,
     epoch_starts_ms: np.ndarray,
@@ -438,6 +469,7 @@ def timing_recursion_piecewise(
     return out[0]
 
 
+@contract("[B,E,N,N]", "[B,E]", "R", "*[B,N]", ret="[B,R+1,N]")
 def batched_timing_recursion_piecewise(
     Ws: np.ndarray,
     epoch_starts_ms: np.ndarray,
@@ -461,8 +493,9 @@ def batched_timing_recursion_piecewise(
     Weff = Ws.copy()
     idx = np.arange(N)
     diag = Weff[:, :, idx, idx]
-    Weff[:, :, idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
-    t = np.zeros((B, N)) if t0 is None else np.asarray(t0, dtype=np.float64).copy()
+    Weff[:, :, idx, idx] = np.where(missing_mask(diag), 0.0, diag)
+    t = (np.zeros((B, N), dtype=np.float64) if t0 is None
+         else np.asarray(t0, dtype=np.float64).copy())
     out = np.empty((B, num_rounds + 1, N), dtype=np.float64)
     out[:, 0] = t
     b_idx = np.arange(B)[:, None]
@@ -478,6 +511,7 @@ def batched_timing_recursion_piecewise(
 # Critical circuit (vectorized tight-subgraph extraction)
 
 
+@contract("[N,N]")
 def critical_circuit_dense(
     W: np.ndarray, *, tau: Optional[float] = None
 ) -> Tuple[float, List[int]]:
@@ -497,14 +531,14 @@ def critical_circuit_dense(
     N = W.shape[0]
     if tau is None:
         tau = float(batched_cycle_time(W))
-    if tau == NEG_INF or N == 0:
+    if missing_mask(tau) or N == 0:
         return NEG_INF, []
     finite = W > NEG_INF
     with np.errstate(invalid="ignore"):
         Wr = np.where(finite, W - tau, NEG_INF)
     eps = 1e-9 * max(1.0, abs(tau))
     # Longest-path potentials from the all-zeros super-source.
-    pot = np.zeros(N)
+    pot = np.zeros(N, dtype=np.float64)
     for _ in range(N):
         nxt = np.maximum(pot, np.max(pot[:, None] + Wr, axis=0))
         if np.all(nxt <= pot + eps):

@@ -57,6 +57,7 @@ from typing import Hashable, List, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.contracts import contract
 from .delays import ConnectivityGraph, TrainingParams
 from .matcha import Matcha, greedy_edge_coloring
 from .maxplus_sparse import (
@@ -206,7 +207,7 @@ class FixedSchedule(Schedule):
                 tp.local_steps * gc.silo_params[v].comp_time_ms
                 for v in gc.silos
             )
-            return np.full(num_rounds, comp)
+            return np.full(num_rounds, comp, dtype=np.float64)
         masks = np.ones((1, num_rounds, len(arcs)), dtype=bool)
         times = _priced_recursion(gc, tp, arcs, masks)
         return np.diff(times[0].max(axis=1))
@@ -450,6 +451,7 @@ def _recursion_from_unique(
     )
 
 
+@contract("#S", ret="[S,K]", seeds="#K")
 def average_cycle_times_batched(
     schedules: Sequence[MatchaSchedule],
     gc: ConnectivityGraph,
@@ -466,7 +468,7 @@ def average_cycle_times_batched(
     rounds=rounds, seed=seed)`` exactly.
     """
     if not schedules:
-        return np.zeros((0, len(seeds)))
+        return np.zeros((0, len(seeds)), dtype=np.float64)
     base = schedules[0].matchings
     if any(s.matchings != base for s in schedules):
         raise ValueError("batched pricing requires a shared matching pool")
@@ -496,6 +498,7 @@ def average_cycle_times_batched(
 # Constructors / designer
 
 
+@contract()
 def matcha_schedule_from_connectivity(
     gc: ConnectivityGraph, budget: float = 0.5, *, sample_seed: int = 0
 ) -> MatchaSchedule:
@@ -515,6 +518,7 @@ def matcha_schedule_from_connectivity(
     )
 
 
+@contract()
 def matcha_schedule_from_underlay(
     underlay, budget: float = 0.5, *, sample_seed: int = 0
 ) -> MatchaSchedule:
@@ -529,6 +533,7 @@ def matcha_schedule_from_underlay(
     )
 
 
+@contract()
 def schedule_from_matcha(m: Matcha, *, sample_seed: int = 0) -> MatchaSchedule:
     """Lift a legacy :class:`~repro.core.matcha.Matcha` sampler."""
     return MatchaSchedule(
@@ -538,6 +543,7 @@ def schedule_from_matcha(m: Matcha, *, sample_seed: int = 0) -> MatchaSchedule:
     )
 
 
+@contract()
 def design_matcha_schedule(
     gc: ConnectivityGraph,
     tp: TrainingParams,

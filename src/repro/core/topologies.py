@@ -852,13 +852,14 @@ def search_overlays_jit(
     # climb accepts moves by f32 score, so comparing the final candidates
     # in f64 is what makes the "never worse than the seeds" guarantee
     # exact rather than f32-approximate.
-    tau = np.asarray(tau)
+    # One batched device->host transfer instead of four implicit syncs.
+    a_src, a_dst, a_act, tau = jax.device_get((a_src, a_dst, a_act, tau))
     best = int(np.argmin(tau))
     candidates: List[List[Tuple[int, int]]] = []
     if np.isfinite(tau[best]):
-        b_src = np.asarray(a_src[best])
-        b_dst = np.asarray(a_dst[best])
-        keep = np.asarray(a_act[best]) & (b_src != b_dst) & allowed[b_src, b_dst]
+        b_src = a_src[best]
+        b_dst = a_dst[best]
+        keep = a_act[best] & (b_src != b_dst) & allowed[b_src, b_dst]
         candidates.append(
             [(int(i), int(j)) for (i, j) in zip(b_src[keep], b_dst[keep])]
         )

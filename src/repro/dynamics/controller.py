@@ -368,6 +368,7 @@ class OnlineTopologyController:
             else self._window_size
         )
         self._window: Deque[float] = deque(maxlen=self._window_size)
+        self._window_sum = 0.0
         self._strikes = 0
         self._round = 0
         self._rounds_since_swap = 0
@@ -411,7 +412,16 @@ class OnlineTopologyController:
     def measured_ms(self) -> Optional[float]:
         if len(self._window) < self._window_size:
             return None
-        return float(np.mean(self._window))
+        # O(1) running sum: this property is read every observed round,
+        # and an O(window) np.mean over the deque showed up in the
+        # controller hot path once rounds got cheap (repro-lint sweep).
+        return self._window_sum / self._window_size
+
+    def _window_push(self, duration_ms: float) -> None:
+        if len(self._window) == self._window_size:
+            self._window_sum -= self._window[0]  # deque evicts leftmost
+        self._window.append(duration_ms)
+        self._window_sum += duration_ms
 
     def observe_round(self, duration_ms: float) -> Optional[Redesign]:
         """Feed one realized round duration; maybe returns an actuation."""
@@ -431,7 +441,7 @@ class OnlineTopologyController:
                 )
         if self._rounds_since_swap <= self._warmup:
             return None  # swap transient: not the network's fault
-        self._window.append(duration_ms)
+        self._window_push(duration_ms)
         measured = self.measured_ms
         if measured is None:
             return None
@@ -615,6 +625,7 @@ class OnlineTopologyController:
         self.schedule = best_sched
         self.predicted_tau_ms = predicted
         self._window.clear()
+        self._window_sum = 0.0
         self._strikes = 0
         self._rounds_since_swap = 0
         self._last_redesign = self._round

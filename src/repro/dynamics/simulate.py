@@ -36,6 +36,7 @@ from ..core.maxplus_vec import (
     _epoch_of,
     batched_cycle_time,
     batched_timing_recursion_piecewise,
+    missing_mask,
 )
 from ..core.schedule import Schedule, ScheduleEstimate
 from .events import NetworkEpoch, Scenario, active_subgraph
@@ -228,7 +229,7 @@ class DynamicTimeline:
         )
         idx = np.arange(Ws.shape[-1])
         diag = Ws[:, idx, idx]
-        Ws[:, idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
+        Ws[:, idx, idx] = np.where(missing_mask(diag), 0.0, diag)
         self._Weff = Ws
 
     def set_schedule(self, schedule: Schedule) -> None:
@@ -264,7 +265,7 @@ class DynamicTimeline:
             W = _epoch_matrix(self.epochs[ei], self.tp, edges)
             idx = np.arange(W.shape[-1])
             diag = W[idx, idx]
-            W[idx, idx] = np.where(diag == NEG_INF, 0.0, diag)
+            W[idx, idx] = np.where(missing_mask(diag), 0.0, diag)
             if len(self._sched_cache) >= self._SCHED_CACHE_MAX:
                 self._sched_cache.pop(next(iter(self._sched_cache)))
             self._sched_cache[key] = W
@@ -291,7 +292,13 @@ class DynamicTimeline:
             raise RuntimeError("set_overlay()/set_schedule() before stepping")
         e = _epoch_of(self.starts, self.t)  # [N] epoch per sender
         if self._Weff is not None:
-            Wk = self._Weff[e, np.arange(len(self.t)), :]
+            e0 = int(e[0])
+            if np.all(e == e0):
+                # Common case: every sender sits in the same epoch, so the
+                # per-sender gather reduces to a view of one epoch matrix.
+                Wk = self._Weff[e0]
+            else:
+                Wk = self._Weff[e, np.arange(len(self.t)), :]
         else:
             edges = tuple(self._schedule.round_edges(self.rounds_done))
             Wk = np.empty((len(self.t), len(self.t)))

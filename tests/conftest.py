@@ -1,0 +1,11 @@
+"""Shared test configuration.
+
+Shape contracts (:mod:`repro.analysis.contracts`) are runtime-checked
+throughout the suite: every engine call in every test doubles as a
+contract check.  Production runs leave the env var unset and pay only a
+dict lookup per call.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_CHECK_CONTRACTS", "1")

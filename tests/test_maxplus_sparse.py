@@ -30,9 +30,11 @@ from repro.core.maxplus_sparse import (
     scc_labels_sparse,
 )
 from repro.core.maxplus_vec import (
+    NEG_INF,
     batched_cycle_time,
     batched_is_strongly_connected,
     batched_timing_recursion,
+    missing_mask,
     reachability_closure,
     scc_labels,
 )
@@ -203,6 +205,81 @@ def test_overlay_delay_edges_matches_dense_matrices():
     np.testing.assert_allclose(
         batched_cycle_time_sparse(eb), batched_cycle_time(Wd), rtol=1e-12
     )
+
+
+# ---------------------------------------------------------------------------
+# Adversarial NEG_INF arithmetic: the sentinel must stay absorbing (never
+# NaN) under f32 and under padded-edge masks — the failure modes the
+# repro-lint sentinel-discipline rule exists to keep out of the engines.
+# ---------------------------------------------------------------------------
+
+
+def test_all_padding_f32_yields_neg_inf_not_nan():
+    """A fully padded f32 batch: every reduction walks -inf + -inf chains,
+    which must stay -inf (absorbing), never NaN (-inf - -inf)."""
+    z = np.zeros((4, 6), dtype=np.int32)
+    eb = EdgeBatch(z, z, np.full((4, 6), NEG_INF, dtype=np.float32), 5)
+    tau = batched_cycle_time_sparse(eb)
+    assert np.all(np.isneginf(np.asarray(tau, dtype=np.float64)))
+    assert not np.any(np.isnan(tau))
+    times = batched_timing_recursion_sparse(eb, 7)
+    assert not np.any(np.isnan(times))
+    assert not np.all(batched_is_strongly_connected_sparse(eb))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000), st.booleans())
+def test_property_interleaved_neg_inf_padding_is_absorbing(n, seed, use_f32):
+    """Padded arcs shuffled *between* real arcs (not just appended at the
+    tail, the layout dense_to_edge_batch emits) pointing at arbitrary
+    node pairs must be invisible to every engine, in f32 and f64."""
+    rng = np.random.default_rng(seed)
+    dtype = np.float32 if use_f32 else np.float64
+    W = random_strong_batch(rng, 4, n)
+    eb = dense_to_edge_batch(W)
+    b, e = eb.src.shape
+    p = int(rng.integers(1, 2 * n + 2))
+    pad_src = rng.integers(0, n, (b, p)).astype(eb.src.dtype)
+    pad_dst = rng.integers(0, n, (b, p)).astype(eb.dst.dtype)
+    perm = rng.permutation(e + p)
+    adv = EdgeBatch(
+        np.concatenate([eb.src, pad_src], axis=1)[:, perm],
+        np.concatenate([eb.dst, pad_dst], axis=1)[:, perm],
+        np.concatenate(
+            [eb.w, np.full((b, p), NEG_INF)], axis=1
+        )[:, perm].astype(dtype),
+        n,
+    )
+    ref_eb = EdgeBatch(eb.src, eb.dst, eb.w.astype(dtype), n)
+    ref = batched_cycle_time_sparse(ref_eb)
+    got = batched_cycle_time_sparse(adv)
+    # max-plus reductions are order-independent and -inf is absorbing,
+    # so agreement is exact even in f32 — not merely close.
+    np.testing.assert_array_equal(got, ref)
+    assert not np.any(np.isnan(got))
+    np.testing.assert_array_equal(
+        batched_is_strongly_connected_sparse(adv),
+        batched_is_strongly_connected_sparse(ref_eb),
+    )
+    t_ref = batched_timing_recursion_sparse(ref_eb, 6)
+    t_got = batched_timing_recursion_sparse(adv, 6)
+    np.testing.assert_array_equal(t_got, t_ref)
+    assert not np.any(np.isnan(t_got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 9), st.integers(0, 10_000))
+def test_property_missing_mask_survives_round_trip(n, seed):
+    """missing_mask is the sanctioned absent-arc test: it must identify
+    exactly the -inf holes through dense -> sparse -> dense, and treat a
+    huge-but-finite f32 value as a real arc, not padding."""
+    rng = np.random.default_rng(seed)
+    W = random_dense_batch(rng, 6, n, density=0.3)
+    back = edge_batch_to_dense(dense_to_edge_batch(W))
+    np.testing.assert_array_equal(missing_mask(back), missing_mask(W))
+    np.testing.assert_array_equal(missing_mask(W), np.isneginf(W))
+    assert bool(missing_mask(np.float32(NEG_INF)))
+    assert not bool(missing_mask(np.float32(-3.0e38)))  # finite in f32
 
 
 def test_jax_sparse_matches_numpy_sparse():

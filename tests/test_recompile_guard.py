@@ -1,0 +1,85 @@
+"""Recompile guard: "sampled topologies never recompile" as an assert.
+
+The traced-consensus lowering (``make_train_step(..., consensus_arg=
+True)``) takes the per-round consensus matrix as *data*, so feeding a
+fresh MATCHA-sampled matrix every round must cost exactly one
+compilation.  :class:`repro.analysis.recompile.TraceCounter` wraps the
+step function *before* ``jax.jit``; a second trace means some static
+signature varied (dtype drift, weak-type flip, shape change) and the
+per-round cost silently became a per-round compile.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.recompile import TraceCounter, assert_max_traces
+from repro.core.schedule import MatchaSchedule
+from repro.data import FederatedBatcher, SyntheticLMStream
+from repro.fed import DPASGDConfig, init_state, make_train_step
+from repro.fed.gossip import ScheduleSlot
+from repro.models import ModelConfig
+from repro.optim import sgd
+
+N_SILOS = 4
+N_ROUNDS = 12
+
+
+def _setup():
+    cfg = ModelConfig("tiny", "dense", 2, 64, 2, 2, 128, 256,
+                      n_silos=N_SILOS)
+    fed = DPASGDConfig(local_steps=1, gossip_impl="einsum")
+    opt = sgd(0.1)
+    step_fn = make_train_step(cfg, fed, opt, plan=None, consensus_arg=True)
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    stream = SyntheticLMStream(cfg.vocab_size, 16, n_silos=N_SILOS)
+    batcher = FederatedBatcher(stream, local_steps=fed.local_steps,
+                               batch_per_silo=2)
+    return step_fn, state, batcher
+
+
+def _matcha_slot():
+    sched = MatchaSchedule(
+        matchings=(((0, 1), (2, 3)), ((1, 2), (0, 3)), ((0, 2),)),
+        budget=0.5,
+    )
+    return ScheduleSlot(sched, N_SILOS)
+
+
+def test_traced_consensus_compiles_once_across_sampled_rounds():
+    step_fn, state, batcher = _setup()
+    counter = TraceCounter(step_fn, name="dpasgd_step")
+    jstep = jax.jit(counter)
+    slot = _matcha_slot()
+
+    seen = set()
+    for k in range(N_ROUNDS):
+        batch = {key: jnp.asarray(v)
+                 for key, v in batcher.batch(k).items()}
+        A = jnp.asarray(slot.matrix_for_round(k))
+        seen.add(tuple(np.asarray(A).ravel().tolist()))
+        state, aux = jstep(state, batch, A)
+
+    # The schedule really sampled distinct topologies...
+    assert len(seen) >= 2, "MATCHA sampling degenerated to one matrix"
+    # ...and they all flowed through one compilation.
+    assert counter.count == 1, (
+        f"train step traced {counter.count} times over {N_ROUNDS} "
+        f"sampled rounds"
+    )
+    assert_max_traces(counter)
+    assert np.isfinite(float(aux["loss"]))
+
+
+def test_assert_max_traces_reports_retrace():
+    counter = TraceCounter(lambda x: x + 1, name="toy")
+    jtoy = jax.jit(counter)
+    jtoy(jnp.zeros((2,)))
+    jtoy(jnp.zeros((3,)))  # shape change forces a retrace
+    assert counter.count == 2
+    try:
+        assert_max_traces(counter, limit=1)
+    except AssertionError as exc:
+        assert "toy" in str(exc)
+    else:  # pragma: no cover
+        raise AssertionError("expected assert_max_traces to fail")
