@@ -50,6 +50,11 @@ def main() -> None:
             metrics[name] = out
         print(f"[{name} done in {time.time()-t:.1f}s]\n")
     if args.json:
+        # Provenance stamp: BENCH numbers are only comparable across runs
+        # of the same rev / jax / device, so say which this was.
+        from repro.obs.events import run_metadata
+
+        metrics["_meta"] = run_metadata({"smoke": bool(args.smoke)})
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -10,8 +10,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 FAST_ARGS=()
+FAST=0
 if [[ "${1:-}" == "--fast" ]]; then
   FAST_ARGS=(-m "not slow")
+  FAST=1
   shift
 fi
 # Property tests silently degrade to deterministic compat-shim sweeps when
@@ -42,3 +44,21 @@ echo "== bench smoke =="
 # Seconds-scale pass over the smoke-capable benchmarks (tiny grids, perf
 # asserts off, correctness asserts on) so bench code cannot silently rot.
 python -m benchmarks.run --smoke
+if [[ "$FAST" == 0 ]]; then
+  # Obs trace smoke (full lane only — a subprocess train run is minutes):
+  # the closed-loop linkfail scenario must produce a schema-valid flight
+  # recording that obs_report can both validate and render.  This is the
+  # end-to-end contract for the observability layer: recorder wiring in
+  # train.py, controller decision records, and the report toolchain.
+  echo "== obs trace smoke =="
+  TRACE=$(mktemp /tmp/obs_trace.XXXXXX.jsonl)
+  trap 'rm -f "$TRACE"' EXIT
+  python -m repro.launch.train --arch internlm2-1.8b --reduced --dynamic \
+    --underlay gaia --scenario linkfail --steps 60 \
+    --trace-out "$TRACE" --metrics-interval 5 >/dev/null
+  python scripts/obs_report.py --check "$TRACE"
+  # Render the full report to /dev/null: a crash here means the trace
+  # has records the report code can't handle.  (No `| head`: pipefail
+  # turns the reader's SIGPIPE into a spurious CI failure.)
+  python scripts/obs_report.py "$TRACE" >/dev/null
+fi

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Render / validate / diff flight-recorder traces.  Run from anywhere:
+
+    python scripts/obs_report.py t.jsonl            # timeline + bottlenecks
+    python scripts/obs_report.py --check t.jsonl    # schema gate (CI)
+    python scripts/obs_report.py a.jsonl b.jsonl    # diff two runs
+
+Traces are written by ``train.py --trace-out t.jsonl`` (see
+``repro.obs.events`` for the schema).  Exit 1 iff --check finds schema
+problems.
+"""
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs.report import (  # noqa: E402
+    check_trace,
+    diff_traces,
+    load_trace,
+    render_report,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="obs_report",
+        description="Timeline, bottleneck attribution and diffs over "
+                    "repro.obs flight-recorder traces.")
+    ap.add_argument("trace", help="JSONL trace (train.py --trace-out)")
+    ap.add_argument("other", nargs="?", default=None,
+                    help="second trace: print a diff instead of a report")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the trace(s) against the schema and "
+                         "exit nonzero on any problem")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        ok = True
+        for path in filter(None, (args.trace, args.other)):
+            good, lines = check_trace(path)
+            print("\n".join(lines))
+            ok = ok and good
+        return 0 if ok else 1
+
+    if args.other:
+        print(diff_traces(load_trace(args.trace), load_trace(args.other)))
+        return 0
+
+    print(render_report(load_trace(args.trace)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,7 @@ from .rng_discipline import RngDisciplineRule
 from .sentinel import SentinelDisciplineRule
 from .dtype_discipline import DtypeDisciplineRule
 from .contracts_rule import EngineContractRule
+from .obs_purity import ObsPurityRule
 
 ALL_RULES = [
     TraceSafetyRule,
@@ -17,8 +18,9 @@ ALL_RULES = [
     SentinelDisciplineRule,
     DtypeDisciplineRule,
     EngineContractRule,
+    ObsPurityRule,
 ]
 
 __all__ = ["ALL_RULES", "TraceSafetyRule", "RngDisciplineRule",
            "SentinelDisciplineRule", "DtypeDisciplineRule",
-           "EngineContractRule"]
+           "EngineContractRule", "ObsPurityRule"]

@@ -21,6 +21,7 @@ from typing import Dict, Hashable, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from ..analysis.contracts import contract
+from ..obs.spans import span_fn
 from .maxplus import DelayDigraph
 from .maxplus_vec import NEG_INF
 
@@ -189,6 +190,7 @@ def overlay_delay_matrix(
     return batched_overlay_delay_matrices(gc, tp, arcs, masks)[0]
 
 
+@span_fn("engine.price_matrices")
 @contract(None, None, "#E", "[B,E]", ret="[B,N,N]")
 def batched_overlay_delay_matrices(
     gc: ConnectivityGraph,

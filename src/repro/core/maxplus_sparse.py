@@ -60,6 +60,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 import numpy as np
 
 from ..analysis.contracts import contract
+from ..obs.spans import span_fn
 from .maxplus_vec import NEG_INF, karp_from_levels, missing_mask
 
 Arc = Tuple[int, int]
@@ -184,6 +185,7 @@ def _dst_segments(eb: EdgeBatch) -> _Segments:
 # Batched Karp (numpy)
 
 
+@span_fn("engine.karp_sparse")
 @contract("eb[B,E,N]", ret="[B]")
 def batched_cycle_time_sparse(
     eb: EdgeBatch,
@@ -744,6 +746,7 @@ def _reach_one(
 
 
 
+@span_fn("engine.price_edges")
 @contract(None, None, "#E", "[B,E]", ret="eb[B,E+N,N]")
 def batched_overlay_delay_edges(gc, tp, arcs: Sequence[Arc], masks) -> EdgeBatch:
     """Eq. 3 delay *edge lists* for a batch of candidate overlays.

@@ -54,6 +54,10 @@ from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from ..analysis.contracts import contract
+# Host-level spans only: the obs-purity lint rule forbids obs use inside
+# traced bodies (span clocks are host syncs); the disabled path is one
+# module-global flag read per call.
+from ..obs.spans import span_fn
 
 Node = Hashable
 Edge = Tuple[Node, Node]
@@ -112,6 +116,7 @@ def graph_to_matrix(graph) -> Tuple[np.ndarray, Tuple[Node, ...]]:
 # Batched Karp
 
 
+@span_fn("engine.karp_dense")
 @contract("[B,N,N]|[N,N]", ret="[B]|[]")
 def batched_cycle_time(
     weights: np.ndarray,
@@ -469,6 +474,7 @@ def timing_recursion_piecewise(
     return out[0]
 
 
+@span_fn("engine.timing_piecewise")
 @contract("[B,E,N,N]", "[B,E]", "R", "*[B,N]", ret="[B,R+1,N]")
 def batched_timing_recursion_piecewise(
     Ws: np.ndarray,

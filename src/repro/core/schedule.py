@@ -58,6 +58,7 @@ from typing import Hashable, List, Sequence, Tuple
 import numpy as np
 
 from ..analysis.contracts import contract
+from ..obs.spans import span_fn
 from .delays import ConnectivityGraph, TrainingParams
 from .matcha import Matcha, greedy_edge_coloring
 from .maxplus_sparse import (
@@ -451,6 +452,7 @@ def _recursion_from_unique(
     )
 
 
+@span_fn("engine.schedule_cycle_times")
 @contract("#S", ret="[S,K]", seeds="#K")
 def average_cycle_times_batched(
     schedules: Sequence[MatchaSchedule],

@@ -57,6 +57,7 @@ from .maxplus_sparse import (
     batched_is_strongly_connected_sparse,
     batched_overlay_delay_edges,
 )
+from ..obs.spans import span_fn
 
 Node = Hashable
 Edge = Tuple[Node, Node]
@@ -745,6 +746,7 @@ def _seed_states(
     return asrc, adst, aact, seeds
 
 
+@span_fn("designer.search_jit")
 def search_overlays_jit(
     gc: ConnectivityGraph,
     tp: TrainingParams,
@@ -892,6 +894,7 @@ def search_overlays_jit(
 # Registry used by benchmarks / launcher
 
 
+@span_fn("designer.design_overlay")
 def design_overlay(
     kind: str,
     gc: ConnectivityGraph,

@@ -68,6 +68,9 @@ from ..core.schedule import (
 from ..core.topologies import Overlay, design_overlay, search_overlays_jit
 from ..fed.gossip import GossipPlan, MembershipSlot, PlanSlot, ScheduleSlot
 from ..fed.topology_runtime import plan_from_overlay
+from ..obs import metrics as obs_metrics
+from ..obs.events import FlightRecorder
+from ..obs.spans import span_fn
 
 Arc = Tuple[int, int]
 
@@ -124,6 +127,8 @@ class Redesign:
     n_candidates: int  # overlays scored by the batched engine
     elapsed_s: float  # wall time of the whole re-design step
     bottleneck: Tuple[int, ...]  # critical circuit of the new overlay
+    expected_window_ms: float = float("nan")  # calibrated profile at trip time
+    drift: float = float("nan")  # measured / expected - 1 at trip time
     schedule: Optional[Schedule] = None  # the winning schedule (always set)
     membership: Optional[Tuple[int, ...]] = None  # new active set, when churn
     # triggered this actuation (None: same universe as the previous design)
@@ -308,6 +313,8 @@ class OnlineTopologyController:
         schedule: Optional[Schedule] = None,
         membership_slot: Optional[MembershipSlot] = None,
         membership_provider: Optional[Callable[[], Sequence[int]]] = None,
+        recorder: Optional[FlightRecorder] = None,
+        silo_names: Optional[Sequence[str]] = None,
     ):
         """``overlay`` is the initial (or fallback) fixed overlay; pass
         ``schedule`` to start on a randomized one instead (``overlay``
@@ -328,7 +335,14 @@ class OnlineTopologyController:
         ``membership_slot`` (see :class:`~repro.fed.gossip.MembershipSlot`)
         *before* the plan/schedule slots are resized onto it, so the
         training loop always observes membership first and can rebuild
-        its mesh/state before re-lowering."""
+        its mesh/state before re-lowering.
+
+        ``recorder`` (a :class:`repro.obs.events.FlightRecorder`) makes
+        every decision externally auditable: a ``regression`` record when
+        the strike detector trips, a ``redesign`` record per actuation
+        (with the critical circuit, by silo name when ``silo_names`` maps
+        labels to sites), ``membership`` and ``swap`` records as the
+        slots move.  ``None`` (the default) emits nothing."""
         self.tp = tp
         self.config = config
         self.gc = gc
@@ -374,8 +388,16 @@ class OnlineTopologyController:
         self._rounds_since_swap = 0
         self._last_redesign = -config.cooldown_rounds
         self.redesigns: List[Redesign] = []
+        self.recorder = recorder
+        self._silo_names = list(silo_names) if silo_names is not None else None
+        # Last observed deviation, exposed so the launcher can stamp
+        # per-round drift onto "round" trace records without recomputing
+        # the rolling window.
+        self.last_measured_ms: Optional[float] = None
+        self.last_drift: Optional[float] = None
         self._calibrate()
 
+    @span_fn("controller.calibrate")
     def _calibrate(self) -> None:
         """Expected rolling round-time profile of the active *schedule* on
         the current estimate, from the Eq. 4 recursion itself.
@@ -443,6 +465,12 @@ class OnlineTopologyController:
             return None  # swap transient: not the network's fault
         self._window_push(duration_ms)
         measured = self.measured_ms
+        self.last_measured_ms = measured
+        self.last_drift = (
+            measured / self.expected_window_ms - 1.0
+            if measured is not None and self.expected_window_ms
+            else None
+        )
         if measured is None:
             return None
         # Two-sided: slower-than-predicted means congestion/failure/straggler;
@@ -460,6 +488,16 @@ class OnlineTopologyController:
             return None
         if self._round - self._last_redesign < self.config.cooldown_rounds:
             return None
+        if self.recorder is not None:
+            self.recorder.emit(
+                "regression",
+                round_idx=self._round,
+                measured_ms=measured,
+                expected_window_ms=self.expected_window_ms,
+                drift=self.last_drift,
+                strikes=self._strikes,
+            )
+        obs_metrics.counter("controller.regressions").inc()
         return self._redesign(measured)
 
     def _sparse_bottleneck(self, edges) -> Tuple[int, ...]:
@@ -478,10 +516,22 @@ class OnlineTopologyController:
         )
         return tuple(self.gc.silos[c] for c in circ)
 
+    def _names(self, labels: Sequence[int]) -> List[str]:
+        """Silo labels -> site names, where the launch-time mapping has
+        one (labels index the full universe, so it survives churn)."""
+        names = self._silo_names
+        return [
+            names[s] if names is not None and 0 <= s < len(names) else str(s)
+            for s in labels
+        ]
+
+    @span_fn("controller.redesign")
     def _redesign(
         self, measured: float, membership: Optional[Tuple[int, ...]] = None
     ) -> Redesign:
         t0 = time.perf_counter()
+        expected = self.expected_window_ms  # profile that tripped (pre-recal)
+        drift = measured / expected - 1.0 if expected else float("nan")
         if self.connectivity_provider is not None:
             self.gc = self.connectivity_provider()
         elif membership is not None:
@@ -503,6 +553,22 @@ class OnlineTopologyController:
                     label=(
                         f"round{self._round}: {len(old_active)} -> "
                         f"{len(membership)} silos"
+                    ),
+                )
+            if self.recorder is not None:
+                self.recorder.emit(
+                    "membership",
+                    step=self._round,
+                    version=(
+                        self.membership_slot.version
+                        if self.membership_slot is not None
+                        else -1
+                    ),
+                    n_before=len(old_active),
+                    n_after=len(membership),
+                    left=self._names(sorted(set(old_active) - set(membership))),
+                    joined=self._names(
+                        sorted(set(membership) - set(old_active))
                     ),
                 )
         else:
@@ -584,6 +650,13 @@ class OnlineTopologyController:
                 # universe: re-pin the label -> mesh-position order
                 silos=tuple(self.gc.silos) if membership is not None else None,
             )
+            if self.recorder is not None:
+                self.recorder.emit(
+                    "swap",
+                    slot="schedule",
+                    version=self.schedule_slot.version,
+                    label=label,
+                )
             if plan is None:
                 plan = self.schedule_slot.plan
         if self.plan_slot is not None:
@@ -600,12 +673,26 @@ class OnlineTopologyController:
                 )
             elif plan.n_silos == self.plan_slot.plan.n_silos:
                 self.plan_slot.swap(plan, label=label)
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        "swap",
+                        slot="plan",
+                        version=self.plan_slot.version,
+                        label=label,
+                    )
             elif membership is not None and self.membership_slot is not None:
                 # Elastic membership: the MembershipSlot swap above (this
                 # actuation's, not a mere slot existing) told the training
                 # loop to rebuild mesh/state; the resized plan rides the
                 # same actuation.
                 self.plan_slot.swap(plan, label=label, allow_resize=True)
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        "swap",
+                        slot="plan",
+                        version=self.plan_slot.version,
+                        label=label,
+                    )
             else:
                 # Churn changed the silo count but without a
                 # MembershipSlot the mesh axis is sized at launch and
@@ -639,8 +726,34 @@ class OnlineTopologyController:
             n_candidates=scored,
             elapsed_s=elapsed,
             bottleneck=bottleneck,
+            expected_window_ms=expected,
+            drift=drift,
             schedule=best_sched,
             membership=membership,
         )
         self.redesigns.append(redesign)
+        obs_metrics.counter("controller.redesigns").inc()
+        obs_metrics.histogram("controller.redesign_s").observe(elapsed)
+        if elapsed > 0:
+            obs_metrics.gauge("controller.candidates_per_s").set(
+                scored / elapsed
+            )
+        obs_metrics.gauge("controller.predicted_tau_ms").set(predicted)
+        obs_metrics.histogram("controller.drift").observe(drift)
+        if self.recorder is not None:
+            self.recorder.emit(
+                "redesign",
+                round_idx=self._round,
+                winner="fixed" if best is not None else "randomized",
+                name=name,
+                predicted_tau_ms=predicted,
+                measured_ms=measured,
+                expected_window_ms=expected,
+                drift=drift,
+                n_candidates=scored,
+                elapsed_s=elapsed,
+                bottleneck=list(bottleneck),
+                bottleneck_names=self._names(bottleneck),
+                membership=list(membership) if membership else None,
+            )
         return redesign

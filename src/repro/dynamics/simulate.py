@@ -212,6 +212,8 @@ class DynamicTimeline:
         self._Weff: Optional[np.ndarray] = None
         self._schedule: Optional[Schedule] = None
         self._sched_cache: dict = {}
+        self.recorder = None  # optional flight recorder (attach_recorder)
+        self._epoch_emitted = -1
 
     @property
     def now_ms(self) -> float:
@@ -271,6 +273,26 @@ class DynamicTimeline:
             self._sched_cache[key] = W
         return W
 
+    def attach_recorder(self, recorder) -> None:
+        """Emit an ``epoch`` trace record (index, start time, active set)
+        whenever the plant's round front crosses into a new network
+        epoch, starting with the epoch it is in right now."""
+        self.recorder = recorder
+        self._emit_epochs_through(
+            int(_epoch_of(self.starts, np.array([self.now_ms]))[0])
+        )
+
+    def _emit_epochs_through(self, ei: int) -> None:
+        for k in range(self._epoch_emitted + 1, ei + 1):
+            ep = self.epochs[k]
+            self.recorder.emit(
+                "epoch",
+                index=k,
+                t_start_ms=ep.t_start_ms,  # a host float by construction
+                active=list(ep.active),
+            )
+        self._epoch_emitted = max(self._epoch_emitted, ei)
+
     def current_epoch(self) -> NetworkEpoch:
         """Epoch containing the current round front — what a measurement
         service would report if probed right now."""
@@ -309,4 +331,8 @@ class DynamicTimeline:
         finish = float(self.t.max())
         duration = finish - self.round_finish_ms[-1]
         self.round_finish_ms.append(finish)
+        if self.recorder is not None:
+            self._emit_epochs_through(
+                int(_epoch_of(self.starts, np.array([finish]))[0])
+            )
         return duration

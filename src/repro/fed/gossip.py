@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.birkhoff import birkhoff_decomposition
+from repro.obs import metrics as obs_metrics
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6
 
@@ -96,6 +97,8 @@ class PlanSlot:
     (version, label) swaps.
     """
 
+    _slot_kind = "plan"  # metric namespace; subclasses override
+
     def __init__(self, plan: GossipPlan):
         self._plan = plan
         self.version = 0
@@ -128,6 +131,8 @@ class PlanSlot:
         self._plan = plan
         self.version += 1
         self.history.append((self.version, label))
+        obs_metrics.counter(f"slot.{self._slot_kind}_swaps").inc()
+        obs_metrics.gauge(f"slot.{self._slot_kind}_version").set(self.version)
         for cb in self._callbacks:
             cb(plan, self.version)
         return self.version
@@ -156,6 +161,8 @@ class ScheduleSlot(PlanSlot):
     :class:`FixedSchedule` the slot degenerates to a :class:`PlanSlot`
     whose plan never varies.
     """
+
+    _slot_kind = "schedule"
 
     def __init__(self, schedule, n_silos: int, silos: Optional[Sequence] = None,
                  max_cached_plans: int = 512):
@@ -300,6 +307,9 @@ class MembershipSlot:
         self._active = act
         self.version += 1
         self.history.append((self.version, label))
+        obs_metrics.counter("slot.membership_swaps").inc()
+        obs_metrics.gauge("slot.membership_version").set(self.version)
+        obs_metrics.gauge("slot.membership_active").set(len(act))
         for cb in self._callbacks:
             cb(act, self.version)
         return self.version

@@ -92,6 +92,14 @@ def main() -> int:
     ap.add_argument("--churn-checkpoint", default="",
                     help="directory: a departing silo's state row is "
                          "checkpointed there before its shard is dropped")
+    ap.add_argument("--trace-out", default="",
+                    help="write a JSONL flight-recorder trace here (turns "
+                         "on spans + metrics; render/validate it with "
+                         "scripts/obs_report.py)")
+    ap.add_argument("--metrics-interval", type=int, default=10,
+                    help="steps between 'round' trace records (0 disables "
+                         "per-round records; decision records are always "
+                         "written when --trace-out is set)")
     ap.add_argument("--verify-migration", action="store_true",
                     help="after each membership rebuild, re-gather the "
                          "migrated state and verify survivors are "
@@ -101,12 +109,20 @@ def main() -> int:
     args = ap.parse_args()
 
     underlay = None
+    silo_names = None
     if args.dynamic:
         # numpy-only imports: safe before the XLA device-count env is set
         from repro.core import make_underlay
 
         underlay = make_underlay(args.underlay)
         args.silos = underlay.num_silos
+        # Site names for bottleneck attribution in the trace: the paper's
+        # measured networks carry real city labels; synthetic ones don't.
+        from repro.core.networks_data import AWS_NA_SITES, GAIA_SITES
+
+        sites = {"gaia": GAIA_SITES, "aws_na": AWS_NA_SITES}.get(underlay.name)
+        if sites is not None:
+            silo_names = [name for name, _ in sites]
 
     if "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (
@@ -127,7 +143,27 @@ def main() -> int:
     )
     from repro.launch.mesh import make_silo_mesh, mesh_context
     from repro.fed.topology_runtime import plan_for_n_silos, plan_from_overlay
+    from repro.obs import enable as obs_enable, span, summary as span_summary
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.events import FlightRecorder, run_metadata
+    from repro.obs.log import get_logger
     from repro.optim import momentum
+
+    log = get_logger("train")
+    recorder = None
+    if args.trace_out:
+        obs_enable()
+        recorder = FlightRecorder(
+            args.trace_out,
+            meta=run_metadata({
+                "underlay": args.underlay if args.dynamic else None,
+                "scenario": args.scenario if args.dynamic else None,
+                "designer": args.designer,
+                "steps": args.steps,
+            }),
+            silo_names=silo_names,
+        )
+        log.info("trace", path=args.trace_out)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -144,8 +180,9 @@ def main() -> int:
     sched_mode = args.designer == "matcha" and n > 1 and \
         args.gossip_impl != "none"
     if sched_mode and args.gossip_impl not in ("einsum",):
-        print(f"note: --designer matcha lowers gossip as a traced einsum; "
-              f"overriding --gossip-impl {args.gossip_impl}")
+        log.warn("gossip-impl-override",
+                 "matcha lowers gossip as a traced einsum",
+                 requested=args.gossip_impl, used="einsum")
     fed = DPASGDConfig(local_steps=args.local_steps,
                        gossip_impl=("einsum" if sched_mode else
                                     args.gossip_impl) if n > 1 else "none",
@@ -209,6 +246,8 @@ def main() -> int:
         else:
             scenario = static_scenario(underlay, Tc, horizon_ms=horizon)
         timeline = DynamicTimeline(scenario, tp)
+        if recorder is not None:
+            timeline.attach_recorder(recorder)
         provider = lambda: active_subgraph(  # noqa: E731 — shared by both modes
             timeline.current_epoch().gc, timeline.current_epoch().active)
         mem_slot = MembershipSlot(range(n), n)
@@ -231,6 +270,8 @@ def main() -> int:
             connectivity_provider=provider,
             membership_slot=mem_slot,
             membership_provider=timeline.current_active,
+            recorder=recorder,
+            silo_names=silo_names,
             **slot_kw,
         )
     else:
@@ -238,8 +279,9 @@ def main() -> int:
         # from; the measurement-based kinds fall back to their homogeneous
         # mesh equivalents.
         if args.designer == "sparse-rewire":
-            print("note: --designer sparse-rewire needs --dynamic "
-                  "(network measurements); ignoring")
+            log.warn("designer-ignored",
+                     "--designer sparse-rewire needs --dynamic "
+                     "(network measurements)")
         plan = None
         if args.designer == "matcha" and n > 1:
             # Homogeneous MATCHA: matchings of the complete silo graph.
@@ -261,9 +303,10 @@ def main() -> int:
             kind = {"delta_mbst": "mst", "ring_2opt": "ring"}.get(
                 args.topology, args.topology)
             if kind != args.topology:
-                print(f"note: --topology {args.topology} needs --dynamic "
-                      f"(network measurements); using homogeneous "
-                      f"'{kind}' plan")
+                log.warn("topology-fallback",
+                         "measurement-based kind needs --dynamic; using "
+                         "homogeneous plan",
+                         requested=args.topology, used=kind)
             plan = plan_for_n_silos(kind, n) if n > 1 else None
 
     def shard_state(state_host, mesh):
@@ -275,8 +318,19 @@ def main() -> int:
 
         return jax.tree_util.tree_map(put, state_host)
 
-    step_fn = make_train_step(cfg, fed, opt, plan, mesh,
-                              consensus_arg=sched_mode)
+    # Recompile accounting: TraceCounter wraps the *pre-jit* step body, so
+    # its count moves exactly when jax re-traces (initial lowering or a
+    # hot-swap re-lower) — never on a cached executable call.
+    from repro.analysis.recompile import TraceCounter
+
+    def make_counted_step(*a, **kw):
+        counted = TraceCounter(make_train_step(*a, **kw), name="train_step")
+        trace_counters.append(counted)
+        return counted
+
+    trace_counters: list = []
+    step_fn = make_counted_step(cfg, fed, opt, plan, mesh,
+                                consensus_arg=sched_mode)
     state = init_state(cfg, opt, jax.random.PRNGKey(0))
     if n > 1:
         state = shard_state(state, mesh)
@@ -300,9 +354,11 @@ def main() -> int:
                 # round actually spans — a silo departing mid-round is
                 # masked out of this very round's mix, not the next one's.
                 duration = timeline.step()
-            b = {k: jnp.asarray(v) for k, v in
-                 batcher.batch(i, silos=active if args.dynamic else None)
-                 .items()}
+            raw = batcher.batch(i, silos=active if args.dynamic else None)
+            if recorder is not None:
+                obs_metrics.counter("train.h2d_bytes").inc(
+                    sum(getattr(v, "nbytes", 0) for v in raw.values()))
+            b = {k: jnp.asarray(v) for k, v in raw.items()}
             if sched_mode:
                 # per-round sampled consensus: traced argument, same
                 # compiled step for every sampled topology
@@ -320,11 +376,14 @@ def main() -> int:
                         print(f"step {i:4d} consensus masked to "
                               f"{n_act}/{len(active)} silos "
                               f"(mid-round churn)", flush=True)
-                    state, metrics = jstep(state, b, A, mask)
+                    with span("train.step"):
+                        state, metrics = jstep(state, b, A, mask)
                 else:
-                    state, metrics = jstep(state, b, A)
+                    with span("train.step"):
+                        state, metrics = jstep(state, b, A)
             else:
-                state, metrics = jstep(state, b)
+                with span("train.step"):
+                    state, metrics = jstep(state, b)
             if args.dynamic:
                 redesign = controller.observe_round(duration)
                 if redesign is not None:
@@ -370,7 +429,7 @@ def main() -> int:
                     mesh_stack.close()
                     mesh_stack.enter_context(mesh_context(mesh))
                     state = shard_state(state_host, mesh)
-                    jstep = jax.jit(make_train_step(
+                    jstep = jax.jit(make_counted_step(
                         cfg, fed, opt,
                         None if sched_mode else slot.plan, mesh,
                         consensus_arg=sched_mode))
@@ -408,12 +467,31 @@ def main() -> int:
                     active = new_active
                 if slot is not None and slot.version != built_version:
                     # hot-swap: re-lower the train step on the new plan
-                    jstep = jax.jit(make_train_step(cfg, fed, opt, slot.plan,
-                                                    mesh))
+                    jstep = jax.jit(make_counted_step(cfg, fed, opt,
+                                                      slot.plan, mesh))
                     built_version = slot.version
                 # sched_slot swaps need no re-lowering: the consensus
                 # matrix is a traced input, matrix_for_round follows the
                 # new schedule automatically
+            if (recorder is not None and args.metrics_interval
+                    and i % args.metrics_interval == 0):
+                recorder.emit(
+                    "round",
+                    step=i,
+                    duration_ms=duration if args.dynamic else None,
+                    predicted_window_ms=(
+                        controller.expected_window_ms
+                        if controller is not None else None),
+                    measured_window_ms=(
+                        controller.last_measured_ms
+                        if controller is not None else None),
+                    drift=(controller.last_drift
+                           if controller is not None else None),
+                )
+                if args.dynamic:
+                    obs_metrics.histogram("train.round_ms").observe(duration)
+                obs_metrics.gauge("train.recompiles").set(
+                    sum(c.count for c in trace_counters))
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                       f"({time.time()-t0:.1f}s)", flush=True)
@@ -435,6 +513,16 @@ def main() -> int:
         save_checkpoint(args.checkpoint, jax.device_get(state["params"]),
                         step=args.steps)
         print(f"checkpoint -> {args.checkpoint}")
+    if recorder is not None:
+        obs_metrics.gauge("train.recompiles").set(
+            sum(c.count for c in trace_counters))
+        recorder.close(
+            steps=args.steps,
+            recompiles=sum(c.count for c in trace_counters),
+            wall_s=time.time() - t0,
+        )
+        log.info("trace-written", path=args.trace_out,
+                 spans=len(span_summary()))
     return 0
 
 

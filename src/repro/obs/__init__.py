@@ -1,0 +1,89 @@
+"""Observability for the control loop: spans, metrics, events, logs.
+
+The closed loop (engines → designer → controller → hot-swap → training)
+detects regressions, prices candidates and swaps plans with — before
+this package — no externally consumable record of what it saw, decided
+or cost.  ``repro.obs`` is that record, in four trace-safe layers:
+
+* :mod:`~repro.obs.spans`   — nested wall-clock spans over *host-level*
+  entry points (engine calls, designer searches, redesigns, train
+  steps).  Default off; the disabled path is one flag read.
+* :mod:`~repro.obs.metrics` — process-local counters / gauges /
+  histograms (redesign count & latency, candidate throughput, slot
+  versions, recompiles, predicted-vs-measured drift, h→d bytes).
+* :mod:`~repro.obs.events`  — the JSONL flight recorder: every
+  controller decision, epoch transition, membership change and
+  hot-swap as one schema-versioned record; replayable as a measured
+  event stream (``train.py --trace-out``).
+* :mod:`~repro.obs.log`     — structured progress logging (stderr human
+  format + optional JSONL) replacing ad-hoc ``print``.
+
+:mod:`~repro.obs.report` renders a trace into a timeline and a
+bottleneck-attribution table and diffs two traces
+(``scripts/obs_report.py``).  The package is stdlib-only and imports
+nothing from ``repro`` — so any module (including ``repro.core``) can
+instrument itself without dependency cycles.  The ``obs-purity`` lint
+rule keeps that instrumentation out of jax-traced bodies.
+"""
+
+from .spans import (
+    Span,
+    SpanRecord,
+    disable,
+    enable,
+    enabled,
+    pop_finished,
+    span,
+    span_fn,
+    summary,
+)
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    REGISTRY,
+    counter,
+    gauge,
+    histogram,
+)
+from .events import (
+    FlightRecorder,
+    SCHEMA,
+    TRACE_SCHEMA_VERSION,
+    read_trace,
+    run_metadata,
+    validate_record,
+    validate_trace,
+)
+from .log import StructuredLogger, get_logger, set_global_jsonl
+
+__all__ = [
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "REGISTRY",
+    "SCHEMA",
+    "Span",
+    "SpanRecord",
+    "StructuredLogger",
+    "TRACE_SCHEMA_VERSION",
+    "counter",
+    "disable",
+    "enable",
+    "enabled",
+    "gauge",
+    "get_logger",
+    "histogram",
+    "pop_finished",
+    "read_trace",
+    "run_metadata",
+    "set_global_jsonl",
+    "span",
+    "span_fn",
+    "summary",
+    "validate_record",
+    "validate_trace",
+]

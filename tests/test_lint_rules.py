@@ -605,3 +605,100 @@ class TestContractDecorator:
 
         with pytest.raises(ContractError):
             batched_cycle_time(np.zeros((2, 3, 4)))  # not square
+
+
+# ---------------------------------------------------------------------------
+# obs-purity
+# ---------------------------------------------------------------------------
+
+class TestObsPurity:
+    def test_span_call_inside_jitted_body(self):
+        vs = run("""
+            import jax
+            from repro.obs.spans import span
+
+            @jax.jit
+            def f(x):
+                with span("inside"):
+                    return x + 1
+            """)
+        assert any(v.rule == "obs-purity" and "host effects" in v.message
+                   for v in vs)
+
+    def test_metrics_call_inside_scan_body(self):
+        vs = run("""
+            from jax import lax
+            from repro.obs import metrics as obs_metrics
+
+            def body(carry, x):
+                obs_metrics.counter("steps").inc()
+                return carry + x, carry
+
+            def roll(xs):
+                return lax.scan(body, 0.0, xs)
+            """)
+        assert "obs-purity" in rules_of(vs)
+
+    def test_lazy_obs_import_inside_traced_body(self):
+        vs = run("""
+            import jax
+
+            @jax.jit
+            def f(x):
+                from repro.obs.events import FlightRecorder
+                return x
+            """)
+        assert any(v.rule == "obs-purity" and "lazy import" in v.message
+                   for v in vs)
+
+    def test_span_decorator_on_traced_function(self):
+        vs = run("""
+            import jax
+            from repro.obs.spans import span_fn
+
+            @jax.jit
+            @span_fn("engine.bad_jax")
+            def f_jax(x):
+                return x + 1
+            """)
+        assert any(v.rule == "obs-purity" and "decorate the host-level"
+                   in v.message for v in vs)
+
+    def test_host_level_span_decorator_is_clean(self):
+        vs = run("""
+            import jax
+            from repro.obs.spans import span, span_fn
+
+            @jax.jit
+            def kernel_jax(x):
+                return x * 2
+
+            @span_fn("engine.entry")
+            def entry(x):
+                with span("engine.dispatch"):
+                    return kernel_jax(x)
+            """)
+        assert "obs-purity" not in rules_of(vs)
+
+    def test_relative_obs_import_is_recognized(self):
+        vs = run("""
+            import jax
+            from ..obs.spans import span
+
+            @jax.jit
+            def f(x):
+                with span("inside"):
+                    return x
+            """)
+        assert "obs-purity" in rules_of(vs)
+
+    def test_instrumented_engine_modules_stay_clean(self):
+        import pathlib
+        root = pathlib.Path(__file__).resolve().parent.parent
+        for rel in ("src/repro/core/maxplus_vec.py",
+                    "src/repro/core/maxplus_sparse.py",
+                    "src/repro/core/topologies.py",
+                    "src/repro/dynamics/controller.py"):
+            src = (root / rel).read_text()
+            vs = lint_source(src, path=rel)
+            assert not [v for v in vs if v.rule == "obs-purity"], rel

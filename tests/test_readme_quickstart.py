@@ -65,3 +65,26 @@ def test_docs_cross_references_resolve(doc):
         if not ((base / ref).exists() or (REPO / ref).exists()):
             missing.append(ref)
     assert not missing, f"{doc} references missing files: {missing}"
+
+
+def test_docs_obs_schema_in_sync():
+    """The record-kinds table in the Observability section of
+    docs/architecture.md must list exactly the kinds in
+    ``repro.obs.events.SCHEMA`` — a new kind without docs (or a
+    documented kind that no longer exists) fails the gate."""
+    from repro.obs.events import SCHEMA
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    m = re.search(r"## Observability.*?(?=\n## |\Z)", text, flags=re.DOTALL)
+    assert m, "docs/architecture.md has no '## Observability' section"
+    section = m.group(0)
+    # first backticked token of each table row is the record kind
+    documented = {
+        row.group(1)
+        for row in re.finditer(r"^\| `([a-z_]+)` \|", section, flags=re.M)
+    }
+    assert documented == set(SCHEMA), (
+        f"docs/architecture.md record-kinds table out of sync with "
+        f"repro.obs.events.SCHEMA: undocumented={set(SCHEMA) - documented}, "
+        f"stale={documented - set(SCHEMA)}"
+    )
