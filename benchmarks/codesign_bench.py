@@ -1,0 +1,151 @@
+"""(τ, ρ) co-design: batched spectral pricing throughput and the
+wall-clock-to-ε payoff of objective="time_to_eps".
+
+Two questions gate whether mixing-rate pricing can live inside the
+controller's re-design step:
+
+* **spectral throughput** — ρ of a ``[B, N, N]`` consensus stack in one
+  batched SVD vs a per-matrix ``numpy.linalg`` loop, N in {16, 64, 256}
+  (matrices/sec, plus the batching speedup).  The matrices are realistic:
+  random activation masks over a shared arc pool pushed through
+  :func:`repro.core.mixing.batched_mixing_matrices`, the exact layout the
+  portfolio prices.
+* **time-to-target payoff** — across the network zoo, design once under
+  ``objective="tau"`` and once under ``objective="time_to_eps"`` (same
+  candidate pool, MATCHA budgets included) and compare predicted wall
+  clock to a target consensus error ε: ``rounds = log(1/ε)/(−log ρ)``,
+  ``time = rounds · τ``.  The full sweep is slow (Monte-Carlo pricing per
+  network) and runs only outside --smoke.
+
+CSV: codesign,<metric>,<value>,<derived>; ``run()`` returns the metrics
+dict that ``benchmarks.run --json`` serializes (BENCH_codesign.json).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import numpy as np
+
+import repro.core as C
+from repro.core.mixing import (
+    batched_mixing_matrices,
+    batched_rho,
+    schedule_rho,
+    wall_clock_to_eps,
+)
+from repro.dynamics import design_best_schedule
+
+GRID_N = (16, 64, 256)
+BATCH = 64
+SWEEP_NETWORKS = ("gaia", "aws_na", "geant")
+TARGET_EPS = 1e-4
+MATCHA_BUDGETS = (0.3, 0.5)
+
+
+def _consensus_stack(n: int, B: int, seed: int = 0) -> np.ndarray:
+    """[B, n, n] local-degree matrices of random activations on G(n, p)."""
+    rng = np.random.default_rng(seed)
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if rng.random() < min(1.0, 8.0 / n)]
+    arcs = [a for (i, j) in pairs for a in ((i, j), (j, i))]
+    src = np.asarray([a for a, _ in arcs], dtype=np.int64)
+    dst = np.asarray([b for _, b in arcs], dtype=np.int64)
+    on = rng.random((B, len(pairs))) < 0.6
+    masks = np.repeat(on, 2, axis=1).astype(np.float64)
+    return batched_mixing_matrices(n, src, dst, masks)
+
+
+def bench_spectral(n: int, B: int = BATCH) -> Dict[str, float]:
+    W = _consensus_stack(n, B)
+    deflate = W - 1.0 / n
+    # warmup both paths (LAPACK workspace, allocator)
+    batched_rho(W[:2])
+    np.linalg.svd(deflate[0], compute_uv=False)
+    t0 = time.perf_counter()
+    rho_b = batched_rho(W)
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rho_l = np.asarray(
+        [np.linalg.svd(deflate[k], compute_uv=False)[0] for k in range(B)]
+    )
+    loop_s = time.perf_counter() - t0
+    assert np.array_equal(rho_b, rho_l)  # same LAPACK driver per slice
+    return {
+        "n": n,
+        "batch": B,
+        "batched_s": batched_s,
+        "loop_s": loop_s,
+        "matrices_per_sec": B / batched_s,
+        "speedup": loop_s / batched_s,
+    }
+
+
+def bench_time_to_target(network: str) -> Dict[str, float]:
+    """Predicted wall clock to ε under each objective's winning design."""
+    M, Tc = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    u = C.make_underlay(network)
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    kw = dict(
+        n_candidates=64,
+        rewire_restarts=0,
+        matcha_budgets=MATCHA_BUDGETS,
+        matcha_rounds=100,
+        matcha_seeds=(0, 1),
+    )
+    out: Dict[str, float] = {"network": network, "num_silos": u.num_silos}
+    horizon = math.log(1.0 / TARGET_EPS)
+    for objective in ("tau", "time_to_eps"):
+        sched, _ = design_best_schedule(gc, tp, objective=objective, **kw)
+        est = sched.price(gc, tp, rounds=100, seeds=(0, 1))
+        rho = schedule_rho(sched, gc, rounds=128)
+        out[f"{objective}_pick"] = sched.name
+        out[f"{objective}_tau_ms"] = est.tau_ms
+        out[f"{objective}_rho"] = rho
+        out[f"{objective}_time_to_eps_ms"] = horizon * wall_clock_to_eps(
+            est.tau_ms, rho
+        )
+    t_tau = out["tau_time_to_eps_ms"]
+    t_eps = out["time_to_eps_time_to_eps_ms"]
+    # The co-designed pick can never predict worse on its own objective.
+    assert t_eps <= t_tau * (1.0 + 1e-9), (network, t_tau, t_eps)
+    out["speedup_vs_tau_design"] = t_tau / t_eps
+    return out
+
+
+def run(smoke: bool = False) -> Dict[str, Dict[str, float]]:
+    print("# codesign: batched rho pricing + time-to-target payoff")
+    metrics: Dict[str, Dict[str, float]] = {}
+    grid = (16,) if smoke else GRID_N
+    batch = 8 if smoke else BATCH
+    for n in grid:
+        sp = bench_spectral(n, batch)
+        metrics[f"spectral_n{n}"] = sp
+        print(f"codesign,rho_batched_ms_n{n},{sp['batched_s']*1e3:.2f},"
+              f"B={sp['batch']} speedup={sp['speedup']:.1f}x")
+        print(f"codesign,rho_matrices_per_sec_n{n},"
+              f"{sp['matrices_per_sec']:.0f},")
+    if smoke:
+        # one cheap end-to-end arbitration so the objective plumbing runs
+        # in CI without the Monte-Carlo zoo sweep
+        tt = bench_time_to_target("gaia")
+        metrics["time_to_target_gaia"] = tt
+        print(f"codesign,gaia_speedup_vs_tau_design,"
+              f"{tt['speedup_vs_tau_design']:.2f},"
+              f"{tt['tau_pick']} -> {tt['time_to_eps_pick']}")
+        return metrics
+    for network in SWEEP_NETWORKS:
+        tt = bench_time_to_target(network)
+        metrics[f"time_to_target_{network}"] = tt
+        print(f"codesign,{network}_speedup_vs_tau_design,"
+              f"{tt['speedup_vs_tau_design']:.2f},"
+              f"{tt['tau_pick']} -> {tt['time_to_eps_pick']} "
+              f"N={tt['num_silos']}")
+    return metrics
+
+
+if __name__ == "__main__":
+    run()

@@ -31,11 +31,13 @@ def main() -> None:
     from . import table3, local_steps, access_links, speedup_vs_s
     from . import analytic, matcha_budget, table9, kernel_bench, gossip_bench
     from . import maxplus_bench, dynamics_bench, sparse_search_bench
+    from . import codesign_bench
 
     metrics = {}
     for mod in (table3, local_steps, access_links, speedup_vs_s, analytic,
                 matcha_budget, table9, gossip_bench, kernel_bench,
-                maxplus_bench, dynamics_bench, sparse_search_bench):
+                maxplus_bench, dynamics_bench, sparse_search_bench,
+                codesign_bench):
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
             continue

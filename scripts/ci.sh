@@ -50,11 +50,14 @@ if [[ "$FAST" == 0 ]]; then
   # recording that obs_report can both validate and render.  This is the
   # end-to-end contract for the observability layer: recorder wiring in
   # train.py, controller decision records, and the report toolchain.
+  # --objective time_to_eps makes every re-design price (tau, rho)
+  # co-design, so the trace also carries the mixing-rate audit fields.
   echo "== obs trace smoke =="
   TRACE=$(mktemp /tmp/obs_trace.XXXXXX.jsonl)
   trap 'rm -f "$TRACE"' EXIT
   python -m repro.launch.train --arch internlm2-1.8b --reduced --dynamic \
     --underlay gaia --scenario linkfail --steps 60 \
+    --objective time_to_eps \
     --trace-out "$TRACE" --metrics-interval 5 >/dev/null
   python scripts/obs_report.py --check "$TRACE"
   # Render the full report to /dev/null: a crash here means the trace

@@ -52,7 +52,8 @@ class LintConfig:
         "src/repro/core/maxplus_vec.py",
         "src/repro/core/maxplus_sparse.py",
         "src/repro/core/delays.py",
-        "src/repro/core/schedule.py")
+        "src/repro/core/schedule.py",
+        "src/repro/core/mixing.py")
     # The one module allowed to define the -inf sentinel.
     sentinel_home: str = "src/repro/core/maxplus_vec.py"
     sentinel_names: Tuple[str, ...] = ("NEG_INF", "_NEG_INF")

@@ -121,6 +121,25 @@ from .consensus import (
     is_doubly_stochastic,
     spectral_gap,
 )
+from .mixing import (
+    OBJECTIVES,
+    WEIGHT_RULES,
+    batched_mixing_matrices,
+    batched_rho,
+    batched_rho_jax,
+    batched_spectral_gap,
+    batched_spectral_gap_jax,
+    contraction_from_gram,
+    matcha_expected_gram,
+    mixing_matrix,
+    overlay_mixing_matrix,
+    overlay_rho,
+    overlay_rho_batch,
+    pareto_frontier,
+    schedule_rho,
+    score_estimate,
+    wall_clock_to_eps,
+)
 from .birkhoff import birkhoff_decomposition, reconstruct, schedule_cost
 from .simulator import (
     Timeline,

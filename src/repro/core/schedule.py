@@ -52,7 +52,7 @@ from __future__ import annotations
 import abc
 import math
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Hashable, List, Sequence, Tuple
 
 import numpy as np
@@ -84,17 +84,31 @@ class ScheduleInfeasibleError(ValueError):
 
 @dataclass(frozen=True)
 class ScheduleEstimate:
-    """Priced cycle time of a schedule on one connectivity graph.
+    """Priced (cycle time, mixing rate) of a schedule on one estimate.
 
     ``tau_ms`` is the mean over Monte-Carlo replicates, ``ci95_ms`` the
     95% normal-approximation half-width over seeds (0.0 when the
     schedule is deterministic or a single seed was used), ``per_seed_ms``
-    the raw per-replicate averages.
+    the raw per-replicate averages.  ``rho`` is the per-round consensus
+    contraction factor (second-largest singular value of the deployed
+    matrix for fixed schedules, ``sqrt(λ_max(E[WᵀW] − J/n))`` for
+    randomized ones — see :mod:`repro.core.mixing`); NaN means mixing
+    was not priced (τ-only callers never pay the spectral cost).
     """
 
     tau_ms: float
     ci95_ms: float
     per_seed_ms: Tuple[float, ...]
+    rho: float = float("nan")
+
+    @property
+    def time_to_eps_score(self) -> float:
+        """``τ / −log(ρ)`` — ms per e-fold of consensus-error decay
+        (:func:`repro.core.mixing.wall_clock_to_eps`); NaN when ρ is
+        unpriced, +inf when ρ ≥ 1 (no contraction)."""
+        from .mixing import wall_clock_to_eps
+
+        return wall_clock_to_eps(self.tau_ms, self.rho)
 
 
 class Schedule(abc.ABC):
@@ -554,18 +568,24 @@ def design_matcha_schedule(
     rounds: int = 150,
     seeds: Sequence[int] = (0, 1, 2),
     sample_seed: int = 0,
+    objective: str = "tau",
+    mixing_rounds: int = 128,
 ) -> Tuple[MatchaSchedule, ScheduleEstimate]:
     """Budget sweep: one batched engine call across budgets × seeds.
 
     Prices a :class:`MatchaSchedule` at every budget (``len(budgets) *
     len(seeds)`` Monte-Carlo chains in a single
     :func:`average_cycle_times_batched` evaluation) and returns the
-    budget with the smallest mean τ̄ plus its estimate.  Note τ̄ is
-    typically decreasing in 1/budget — fewer active matchings per round
-    means faster rounds *and less mixing* — so the sweep is a menu over
-    the caller's chosen budgets, not a free lunch; callers that care
-    about convergence-per-wall-clock should restrict ``budgets`` to
-    their mixing floor.
+    budget minimizing ``objective`` plus its estimate.  Under the
+    default ``"tau"`` that is the smallest mean τ̄ — typically the
+    smallest budget, since fewer active matchings per round means
+    faster rounds *and less mixing*.  ``objective="time_to_eps"``
+    additionally prices every budget's expected contraction ρ over
+    ``mixing_rounds`` sampled activation rows
+    (:func:`repro.core.mixing.schedule_rho`) and minimizes the
+    composite ``τ̄ / −log(ρ)``, resolving the throughput/mixing tension
+    the τ-only sweep punts to the caller; the returned estimate then
+    carries the winning ρ.
     """
     try:
         matchings = matcha_schedule_from_connectivity(gc).matchings
@@ -576,5 +596,21 @@ def design_matcha_schedule(
         for b in budgets
     ]
     taus = average_cycle_times_batched(cands, gc, tp, rounds=rounds, seeds=seeds)
-    best = int(np.argmin(taus.mean(axis=1)))
-    return cands[best], _estimate_from_chains(taus[best])
+    mean_taus = taus.mean(axis=1)
+    if objective == "tau":
+        best = int(np.argmin(mean_taus))
+        return cands[best], _estimate_from_chains(taus[best])
+    # time_to_eps (score_estimate validates the name): lazy import —
+    # mixing imports this module at top level, so the cycle breaks here.
+    from .mixing import schedule_rho, score_estimate
+
+    rhos = [
+        schedule_rho(c, gc, rounds=mixing_rounds, seed=sample_seed)
+        for c in cands
+    ]
+    ests = [
+        replace(_estimate_from_chains(taus[k]), rho=rhos[k])
+        for k in range(len(cands))
+    ]
+    best = int(np.argmin([score_estimate(e, objective) for e in ests]))
+    return cands[best], ests[best]

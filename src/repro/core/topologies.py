@@ -941,6 +941,8 @@ def design_schedule(
     rounds: int = 150,
     seeds: Sequence[int] = (0, 1, 2),
     sample_seed: int = 0,
+    objective: str = "tau",
+    mixing_rounds: int = 128,
 ):
     """Run one named designer and return a :class:`repro.core.schedule.Schedule`.
 
@@ -950,9 +952,14 @@ def design_schedule(
     runs the randomized designer — a budget sweep
     (:func:`~repro.core.schedule.design_matcha_schedule`) that prices
     every budget × seed Monte-Carlo chain through the batched sparse
-    engine in one call and returns the budget with the smallest mean τ̄.
-    ``budgets``/``rounds``/``seeds``/``sample_seed`` parameterize the
-    sweep and are ignored for fixed kinds.
+    engine in one call and returns the budget minimizing ``objective``
+    (``"tau"``: mean τ̄; ``"time_to_eps"``: the composite
+    ``τ̄ / −log(ρ)`` with ρ the expected contraction over
+    ``mixing_rounds`` sampled rounds — see :mod:`repro.core.mixing`).
+    ``budgets``/``rounds``/``seeds``/``sample_seed``/``objective``
+    parameterize the sweep; fixed kinds design by cycle time alone
+    (the fixed-vs-randomized arbitration under an objective lives in
+    :func:`repro.dynamics.controller.design_best_schedule`).
     """
     from .schedule import (
         DEFAULT_MATCHA_BUDGETS,
@@ -969,6 +976,8 @@ def design_schedule(
             rounds=rounds,
             seeds=seeds,
             sample_seed=sample_seed,
+            objective=objective,
+            mixing_rounds=mixing_rounds,
         )
         return schedule
     return FixedSchedule(design_overlay(kind, gc, tp, center=center))

@@ -94,5 +94,6 @@ from .controller import (
     Redesign,
     design_best_overlay,
     design_best_schedule,
+    design_schedule_portfolio,
     search_ring_candidates,
 )

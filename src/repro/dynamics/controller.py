@@ -59,9 +59,15 @@ from ..core.maxplus_vec import (
     batched_cycle_time,
     batched_is_strongly_connected,
 )
+from ..core.mixing import (
+    OBJECTIVES,
+    overlay_rho_batch,
+    score_estimate,
+)
 from ..core.schedule import (
     FixedSchedule,
     Schedule,
+    ScheduleEstimate,
     ScheduleInfeasibleError,
     design_matcha_schedule,
 )
@@ -112,6 +118,15 @@ class ControllerConfig:
     matcha_rounds: int = 150  # Monte-Carlo rounds per pricing chain
     matcha_seeds: Tuple[int, ...] = (0, 1, 2)  # chains per budget (CI)
     calibration_seeds: Tuple[int, ...] = (0, 1, 2)  # randomized-profile envelope
+    # What re-design optimizes (repro.core.mixing.OBJECTIVES): "tau"
+    # ranks every candidate on cycle time alone (the paper's Table 1
+    # regime); "time_to_eps" prices each candidate's consensus
+    # contraction rho as well and ranks on the composite wall-clock-
+    # to-epsilon score tau / -log(rho) — the Sect. 4 framing, under
+    # which a well-mixing MATCHA can beat a sparse ring that wins
+    # rounds-per-second but mixes at 1 - O(1/N^2) per round.
+    objective: str = "tau"  # "tau" | "time_to_eps"
+    mixing_rounds: int = 128  # sampled rounds behind E[W^T W] pricing
     seed: int = 0
 
 
@@ -132,6 +147,9 @@ class Redesign:
     schedule: Optional[Schedule] = None  # the winning schedule (always set)
     membership: Optional[Tuple[int, ...]] = None  # new active set, when churn
     # triggered this actuation (None: same universe as the previous design)
+    rho: float = float("nan")  # winner's consensus contraction (NaN when
+    # mixing was not priced, i.e. objective="tau")
+    objective: str = "tau"  # the objective this actuation optimized
 
 
 def search_ring_candidates(
@@ -197,6 +215,36 @@ def design_best_overlay(
     (:func:`repro.core.topologies.search_overlays_jit`), which explores
     local repairs of the running overlay the ring/tree families cannot
     express.  The rewire search is skipped silently if jax is missing."""
+    candidates, scored = _overlay_candidates(
+        gc,
+        tp,
+        n_candidates=n_candidates,
+        designers=designers,
+        rng=rng,
+        incumbent=incumbent,
+        rewire_restarts=rewire_restarts,
+        rewire_steps=rewire_steps,
+    )
+    if not candidates:
+        raise ValueError("no feasible overlay candidate on the current estimate")
+    return min(candidates, key=lambda ov: ov.cycle_time_ms), scored
+
+
+def _overlay_candidates(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    n_candidates: int = 256,
+    designers: Sequence[str] = ControllerConfig.designers,
+    rng: Optional[np.random.Generator] = None,
+    incumbent: Optional[Overlay] = None,
+    rewire_restarts: int = 0,
+    rewire_steps: int = 48,
+) -> Tuple[List[Overlay], int]:
+    """The fixed-overlay candidate pool: (feasible candidates, number of
+    overlays scored).  Shared by :func:`design_best_overlay` (τ argmin)
+    and :func:`design_schedule_portfolio` (which keeps the whole pool so
+    every candidate can be priced under any objective)."""
     rng = np.random.default_rng(0) if rng is None else rng
     candidates: List[Overlay] = []
     scored = 0
@@ -227,9 +275,91 @@ def design_best_overlay(
             pass
         except ValueError:
             pass
-    if not candidates:
-        raise ValueError("no feasible overlay candidate on the current estimate")
-    return min(candidates, key=lambda ov: ov.cycle_time_ms), scored
+    return candidates, scored
+
+
+def design_schedule_portfolio(
+    gc: ConnectivityGraph,
+    tp: TrainingParams,
+    *,
+    n_candidates: int = 256,
+    designers: Sequence[str] = ControllerConfig.designers,
+    rng: Optional[np.random.Generator] = None,
+    incumbent: Optional[Overlay] = None,
+    rewire_restarts: int = 0,
+    rewire_steps: int = 48,
+    matcha_budgets: Sequence[float] = (),
+    matcha_rounds: int = 150,
+    matcha_seeds: Sequence[int] = (0, 1, 2),
+    sample_seed: int = 0,
+    objective: str = "tau",
+    mixing_rounds: int = 128,
+) -> Tuple[List[Tuple[Schedule, ScheduleEstimate]], int]:
+    """The whole priced candidate portfolio: ([(schedule, estimate)],
+    number of candidates scored).
+
+    Every feasible fixed candidate (designers + ring search + sparse
+    rewire) enters as a :class:`FixedSchedule` with its exact Karp τ;
+    with a nonempty ``matcha_budgets`` the winning MATCHA budget enters
+    too (one batched budgets × seeds sweep).  Under
+    ``objective="time_to_eps"`` each estimate also carries its ρ — the
+    fixed pool's deployed-matrix contractions priced in *one* batched
+    SVD (:func:`repro.core.mixing.overlay_rho_batch`), MATCHA's expected
+    contraction from its own sampled activation rows — so callers can
+    scalarize (:func:`repro.core.mixing.score_estimate`) or keep the
+    (τ, ρ) Pareto frontier (:func:`repro.core.mixing.pareto_frontier`).
+    Under ``objective="tau"`` ρ stays NaN and no spectral cost is paid.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; one of {OBJECTIVES}"
+        )
+    rng = np.random.default_rng(0) if rng is None else rng
+    overlays, scored = _overlay_candidates(
+        gc,
+        tp,
+        n_candidates=n_candidates,
+        designers=designers,
+        rng=rng,
+        incumbent=incumbent,
+        rewire_restarts=rewire_restarts,
+        rewire_steps=rewire_steps,
+    )
+    if objective == "time_to_eps" and overlays:
+        rhos = overlay_rho_batch(
+            overlays, gc.num_silos, silos=tuple(gc.silos)
+        )
+    else:
+        rhos = np.full(len(overlays), float("nan"), dtype=np.float64)
+    portfolio: List[Tuple[Schedule, ScheduleEstimate]] = [
+        (
+            FixedSchedule(ov),
+            ScheduleEstimate(
+                tau_ms=ov.cycle_time_ms,
+                ci95_ms=0.0,
+                per_seed_ms=(ov.cycle_time_ms,),
+                rho=float(rho),
+            ),
+        )
+        for ov, rho in zip(overlays, rhos)
+    ]
+    if matcha_budgets:
+        try:
+            sched, est = design_matcha_schedule(
+                gc,
+                tp,
+                budgets=tuple(matcha_budgets),
+                rounds=matcha_rounds,
+                seeds=tuple(matcha_seeds),
+                sample_seed=sample_seed,
+                objective=objective,
+                mixing_rounds=mixing_rounds,
+            )
+            scored += len(matcha_budgets) * len(matcha_seeds)
+            portfolio.append((sched, est))
+        except ScheduleInfeasibleError:  # no routable pairs on this estimate
+            pass
+    return portfolio, scored
 
 
 def design_best_schedule(
@@ -246,21 +376,21 @@ def design_best_schedule(
     matcha_rounds: int = 150,
     matcha_seeds: Sequence[int] = (0, 1, 2),
     sample_seed: int = 0,
+    objective: str = "tau",
+    mixing_rounds: int = 128,
 ) -> Tuple[Schedule, int]:
     """(best schedule, number of candidates scored): the schedule-valued
     superset of :func:`design_best_overlay`.
 
-    The fixed-overlay pool (designers + ring search + sparse rewire) is
-    priced by exact cycle time; with a nonempty ``matcha_budgets`` a
-    MATCHA schedule is additionally priced at every budget × seed chain
-    in one batched engine sweep
-    (:func:`repro.core.schedule.design_matcha_schedule`) and competes on
-    its mean Monte-Carlo τ̄.  Note the comparison is cycle time only —
-    a randomized schedule that wins rounds-per-second still mixes less
-    per round (its budget), which is the caller's tradeoff to configure.
+    Scalarizes :func:`design_schedule_portfolio` under ``objective``:
+    ``"tau"`` compares candidates on cycle time alone (randomized
+    schedules on mean Monte-Carlo τ̄ — which they rarely win, the
+    paper's headline result); ``"time_to_eps"`` on the composite
+    ``τ / −log(ρ)``, under which MATCHA's mixing-per-traffic advantage
+    is finally visible to the auto-family arbitration.  Exact ties go
+    to the fixed pool (listed first).
     """
-    rng = np.random.default_rng(0) if rng is None else rng
-    best_overlay, scored = design_best_overlay(
+    portfolio, scored = design_schedule_portfolio(
         gc,
         tp,
         n_candidates=n_candidates,
@@ -269,24 +399,16 @@ def design_best_schedule(
         incumbent=incumbent,
         rewire_restarts=rewire_restarts,
         rewire_steps=rewire_steps,
+        matcha_budgets=matcha_budgets,
+        matcha_rounds=matcha_rounds,
+        matcha_seeds=matcha_seeds,
+        sample_seed=sample_seed,
+        objective=objective,
+        mixing_rounds=mixing_rounds,
     )
-    best: Schedule = FixedSchedule(best_overlay)
-    best_tau = best_overlay.cycle_time_ms
-    if matcha_budgets:
-        try:
-            sched, est = design_matcha_schedule(
-                gc,
-                tp,
-                budgets=tuple(matcha_budgets),
-                rounds=matcha_rounds,
-                seeds=tuple(matcha_seeds),
-                sample_seed=sample_seed,
-            )
-            scored += len(matcha_budgets) * len(matcha_seeds)
-            if est.tau_ms < best_tau:
-                best, best_tau = sched, est.tau_ms
-        except ScheduleInfeasibleError:  # no routable pairs on this estimate
-            pass
+    if not portfolio:
+        raise ValueError("no feasible overlay candidate on the current estimate")
+    best, _ = min(portfolio, key=lambda c: score_estimate(c[1], objective))
     return best, scored
 
 
@@ -575,6 +697,7 @@ class OnlineTopologyController:
             membership = None  # unchanged universe: not a membership event
         best_sched: Optional[Schedule] = None
         sched_tau: Optional[float] = None
+        sched_est: Optional[ScheduleEstimate] = None
         scored = 0
         if self.config.schedule_family == "matcha" and self.config.matcha_budgets:
             try:  # family pinned: re-fit the distribution to the estimate
@@ -585,8 +708,11 @@ class OnlineTopologyController:
                     rounds=self.config.matcha_rounds,
                     seeds=self.config.matcha_seeds,
                     sample_seed=int(self._rng.integers(1 << 31)),
+                    objective=self.config.objective,
+                    mixing_rounds=self.config.mixing_rounds,
                 )
                 sched_tau = est.tau_ms
+                sched_est = est
                 scored = len(self.config.matcha_budgets) * len(
                     self.config.matcha_seeds
                 )
@@ -601,7 +727,7 @@ class OnlineTopologyController:
                         )
                     )
         if best_sched is None:
-            best_sched, scored = design_best_schedule(
+            portfolio, scored = design_schedule_portfolio(
                 self.gc,
                 self.tp,
                 n_candidates=self.config.n_candidates,
@@ -614,7 +740,19 @@ class OnlineTopologyController:
                 matcha_rounds=self.config.matcha_rounds,
                 matcha_seeds=self.config.matcha_seeds,
                 sample_seed=int(self._rng.integers(1 << 31)),
+                objective=self.config.objective,
+                mixing_rounds=self.config.mixing_rounds,
             )
+            if not portfolio:
+                raise ValueError(
+                    "no feasible overlay candidate on the current estimate"
+                )
+            best_sched, sched_est = min(
+                portfolio,
+                key=lambda c: score_estimate(c[1], self.config.objective),
+            )
+            if not isinstance(best_sched, FixedSchedule):
+                sched_tau = sched_est.tau_ms
         if isinstance(best_sched, FixedSchedule):
             best = best_sched.overlay
             name = best.name
@@ -717,6 +855,7 @@ class OnlineTopologyController:
         self._rounds_since_swap = 0
         self._last_redesign = self._round
         self._calibrate()
+        rho = float(sched_est.rho) if sched_est is not None else float("nan")
         redesign = Redesign(
             round_idx=self._round,
             overlay=best,
@@ -730,6 +869,8 @@ class OnlineTopologyController:
             drift=drift,
             schedule=best_sched,
             membership=membership,
+            rho=rho,
+            objective=self.config.objective,
         )
         self.redesigns.append(redesign)
         obs_metrics.counter("controller.redesigns").inc()
@@ -755,5 +896,10 @@ class OnlineTopologyController:
                 bottleneck=list(bottleneck),
                 bottleneck_names=self._names(bottleneck),
                 membership=list(membership) if membership else None,
+                # (tau, rho) co-design audit: extra fields, so traces
+                # from tau-only runs stay schema-valid (NaN -> None:
+                # JSON has no NaN and readers shouldn't need one).
+                rho=rho if rho == rho else None,
+                objective=self.config.objective,
             )
         return redesign

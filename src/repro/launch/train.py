@@ -79,6 +79,15 @@ def main() -> int:
     ap.add_argument("--matcha-budget", type=float, default=0.5,
                     help="static-mode MATCHA activation probability C_b "
                          "(with --dynamic the budget comes from the sweep)")
+    ap.add_argument("--objective", default="tau",
+                    choices=["tau", "time_to_eps"],
+                    help="what design/re-design optimizes (needs --dynamic): "
+                         "'tau' ranks candidates on cycle time alone; "
+                         "'time_to_eps' also prices each candidate's "
+                         "consensus contraction rho and ranks on the "
+                         "composite tau / -log(rho) — wall clock per "
+                         "e-fold of consensus-error decay (Sect. 4 "
+                         "time-to-accuracy framing)")
     ap.add_argument("--underlay", default="gaia")
     ap.add_argument("--workload", default="inaturalist")
     ap.add_argument("--scenario", default="linkfail",
@@ -159,6 +168,7 @@ def main() -> int:
                 "underlay": args.underlay if args.dynamic else None,
                 "scenario": args.scenario if args.dynamic else None,
                 "designer": args.designer,
+                "objective": args.objective,
                 "steps": args.steps,
             }),
             silo_names=silo_names,
@@ -212,7 +222,8 @@ def main() -> int:
         schedule = None
         if args.designer == "matcha":
             schedule = design_schedule(
-                "matcha", gc0, tp, sample_seed=args.scenario_seed)
+                "matcha", gc0, tp, sample_seed=args.scenario_seed,
+                objective=args.objective)
             tau0 = schedule.price(gc0, tp, rounds=150, seeds=(0,)).tau_ms
             print(f"dynamic: {args.underlay} N={n}, matcha schedule "
                   f"(budget sweep -> C_b={schedule.budget:g}, "
@@ -256,13 +267,15 @@ def main() -> int:
             sched_slot = ScheduleSlot(schedule, n)
             cfg_ctl = ControllerConfig(
                 seed=args.scenario_seed, schedule_family="matcha",
-                matcha_budgets=DEFAULT_MATCHA_BUDGETS)
+                matcha_budgets=DEFAULT_MATCHA_BUDGETS,
+                objective=args.objective)
             slot_kw = dict(schedule_slot=sched_slot)
             plan = None
         else:
             timeline.set_overlay(overlay.edges)
             slot = PlanSlot(plan_from_overlay(overlay, n))
-            cfg_ctl = ControllerConfig(seed=args.scenario_seed)
+            cfg_ctl = ControllerConfig(
+                seed=args.scenario_seed, objective=args.objective)
             slot_kw = dict(plan_slot=slot)
             plan = slot.plan
         controller = OnlineTopologyController(

@@ -744,6 +744,57 @@ def test_controller_hot_swaps_to_randomized_schedule():
     assert timeline.step() > 0
 
 
+def test_redesign_under_time_to_eps_carries_rho_through_the_trace(tmp_path):
+    """Co-design audit: under ``objective="time_to_eps"`` every
+    re-design actuation carries the winner's (τ, ρ) pair, and both
+    round-trip through the flight-recorder trace schema."""
+    from repro.obs.events import FlightRecorder, validate_trace
+
+    u, gc, tp, Tc = gaia_setup()
+    ring = C.design_overlay("ring", gc, tp)
+    sc = silo_degrade_scenario(
+        u, Tc, silo=3, t_ms=30 * ring.cycle_time_ms, factor=0.02,
+        horizon_ms=300 * ring.cycle_time_ms,
+    )
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    slot = ScheduleSlot(C.FixedSchedule(ring), gc.num_silos, silos=gc.silos)
+    trace = str(tmp_path / "codesign.jsonl")
+    with FlightRecorder(trace, silo_names=list(gc.silos)) as rec:
+        controller = OnlineTopologyController(
+            gc, tp, ring,
+            config=ControllerConfig(
+                seed=0, schedule_family="matcha", objective="time_to_eps",
+                matcha_budgets=(0.3, 0.5), matcha_rounds=60,
+                matcha_seeds=(0,), mixing_rounds=60, rewire_restarts=0,
+            ),
+            connectivity_provider=lambda: active_subgraph(
+                timeline.current_epoch().gc, timeline.current_epoch().active
+            ),
+            schedule_slot=slot,
+            recorder=rec,
+            silo_names=list(gc.silos),
+        )
+        for _ in range(100):
+            redesign = controller.observe_round(timeline.step())
+            if redesign is not None:
+                timeline.set_schedule(redesign.schedule)
+    assert len(controller.redesigns) >= 1
+    rd = controller.redesigns[0]
+    # the actuation itself carries the priced pair
+    assert rd.objective == "time_to_eps"
+    assert np.isfinite(rd.rho) and 0.0 < rd.rho < 1.0
+    assert np.isfinite(rd.predicted_tau_ms) and rd.predicted_tau_ms > 0
+    # ...and the trace round-trips it under schema validation
+    records, problems = validate_trace(trace)
+    assert problems == []
+    emitted = [r for r in records if r["kind"] == "redesign"]
+    assert len(emitted) == len(controller.redesigns)
+    for rec_line, actuation in zip(emitted, controller.redesigns):
+        assert rec_line["objective"] == "time_to_eps"
+        assert rec_line["rho"] == pytest.approx(actuation.rho)
+
+
 @pytest.mark.slow  # subprocess train acceptance: ci.sh --fast skips
 def test_train_dynamic_matcha_completes_hot_swap():
     """Acceptance: ``train.py --dynamic --designer matcha`` completes a
