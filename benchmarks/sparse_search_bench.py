@@ -1,14 +1,24 @@
-"""Sparse engine + jitted topology search: the large-N scaling story.
+"""Sparse engine + topology search engines: the large-N scaling story.
 
-Two questions gate the ROADMAP's past-the-dense-wall direction:
+Four questions gate the ROADMAP's past-the-dense-wall direction:
 
 * **scoring** — batched cycle-time evaluation of *sparse* overlays
   (degree <= 8 circulant-style digraphs: ring + 6 random chord offsets
   + self loops, E ~ 8N) at N in {64, 256, 1024}.  The dense engine pays
   O(B*N^3) regardless of sparsity; the edge-list engine pays O(B*N*E).
   Dense timings at N=1024 are measured on a batch subsample and scaled
-  linearly (marked ``~``).  Acceptance: some sparse path beats the dense
-  engine at N=1024.
+  linearly (marked ``~``).  The jitted path is timed per segment-max
+  implementation (``xla`` scatter vs the degree-``padded`` gather
+  layout), and the size dispatcher's pick is recorded.  Acceptance:
+  some sparse path beats the dense engine at N=1024, and the dispatched
+  jax path no longer loses to host numpy there.
+* **delta pricing** — :func:`repro.core.topologies.search_overlays_delta`
+  with incremental certificate pricing vs the identical climb forced
+  through the full-Karp oracle (``pricing="full"``), measured in
+  proposals/second at N=1024, degree <= 8.  Acceptance: >= 5x.
+* **hierarchical** — :func:`search_overlays_hierarchical` on a
+  synthetic clustered 4096-silo WAN: the N~10^4-scale design loop must
+  complete and return a strongly-connected overlay.
 * **search** — :func:`repro.core.topologies.search_overlays_jit` (the
   device-side rewire hill climb) against the controller's 256-candidate
   random-ring search on the Gaia underlay at *equal wall-clock budget*:
@@ -16,33 +26,42 @@ Two questions gate the ROADMAP's past-the-dense-wall direction:
   rewire search's (warm, compile-excluded) wall time.  Acceptance: the
   rewire search's overlay cycle time is <= the ring search's.
 
-CSV rows: ``sparse_search,score,N,B,E,dense_ms,sp64_ms,sp32_ms,spjax_ms``
-and ``sparse_search,gaia,<metric>,<value>``.  ``run()`` returns the
-metrics dict that ``benchmarks.run --json`` serializes
-(BENCH_sparse_search.json).
+CSV rows: ``sparse_search,score,...``, ``sparse_search,delta,...``,
+``sparse_search,hier,...``, and ``sparse_search,gaia,<metric>,<value>``.
+``run()`` returns the metrics dict that ``benchmarks.run --json``
+serializes (BENCH_sparse_search.json); ``run(smoke=True)`` is the CI
+configuration (tiny sizes, perf asserts off, correctness asserts on).
 """
 
 from __future__ import annotations
 
 import math
 import time
-from typing import Dict
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 import repro.core as C
+from repro.core.delays import ConnectivityGraph, SiloParams
 from repro.core.maxplus_sparse import (
     EdgeBatch,
     batched_cycle_time_sparse,
     batched_cycle_time_sparse_jax,
+    cycle_time_engine,
     edge_batch_to_dense,
 )
 from repro.core.maxplus_vec import batched_cycle_time
-from repro.core.topologies import search_overlays_jit
+from repro.core.topologies import (
+    Overlay,
+    search_overlays_delta,
+    search_overlays_hierarchical,
+    search_overlays_jit,
+)
 from repro.dynamics import search_ring_candidates
 
 # (batch scored by the sparse paths, batch actually timed on the dense path)
 _SCORING_GRID = {64: (256, 256), 256: (32, 8), 1024: (8, 2)}
+_SCORING_GRID_SMOKE = {64: (16, 16), 256: (4, 2)}
 _CHORDS = 6  # extra out-edges per vertex -> degree <= 8 with the ring arc
 
 
@@ -81,19 +100,24 @@ def _time(fn, repeats: int = 2) -> float:
     return best * 1e3  # ms
 
 
-def bench_scoring() -> Dict[str, Dict[str, float]]:
+def bench_scoring(smoke: bool = False) -> Dict[str, Dict[str, float]]:
     try:
         import jax
 
-        jit_sparse = jax.jit(batched_cycle_time_sparse_jax, static_argnums=3)
+        jit_sparse = jax.jit(
+            batched_cycle_time_sparse_jax, static_argnums=3,
+            static_argnames=("kernel", "max_in_degree"))
         have_jax = True
     except Exception:
         have_jax = False
 
+    deg = 2 + _CHORDS  # in-degree bound incl. the self-loop
     print("# batched cycle-time scoring of sparse (degree<=8) overlays")
-    print("sparse_search,score,N,B,E,dense_ms,sp64_ms,sp32_ms,spjax_ms")
+    print("sparse_search,score,N,B,E,dense_ms,sp64_ms,sp32_ms,"
+          "spjax_xla_ms,spjax_padded_ms,engine")
     out: Dict[str, Dict[str, float]] = {}
-    for n, (b, b_dense) in _SCORING_GRID.items():
+    grid = _SCORING_GRID_SMOKE if smoke else _SCORING_GRID
+    for n, (b, b_dense) in grid.items():
         rng = np.random.default_rng(n)
         eb = random_sparse_overlays(rng, n, b)
         W = edge_batch_to_dense(eb).astype(np.float32)
@@ -110,13 +134,23 @@ def bench_scoring() -> Dict[str, Dict[str, float]]:
         sp32_ms = _time(lambda: batched_cycle_time_sparse(eb32))
         if have_jax:
             w32 = eb32.w
-            jit_sparse(eb.src, eb.dst, w32, n).block_until_ready()  # compile
-            spjax_ms = _time(
-                lambda: jit_sparse(eb.src, eb.dst, w32, n).block_until_ready()
-            )
-            jax_str = f"{spjax_ms:.2f}"
+
+            def _jit(kernel, **kw):
+                def call():
+                    return jit_sparse(
+                        eb.src, eb.dst, w32, n, kernel=kernel, **kw
+                    ).block_until_ready()
+
+                call()  # compile
+                return _time(call)
+
+            spjax_ms = _jit("xla")
+            padded_ms = _jit("padded", max_in_degree=deg)
+            jax_str = f"{spjax_ms:.2f},{padded_ms:.2f}"
         else:
-            spjax_ms, jax_str = float("inf"), "n/a"
+            spjax_ms = padded_ms = float("inf")
+            jax_str = "n/a,n/a"
+        engine = cycle_time_engine(n, eb.max_edges, b)
 
         # correctness spot check: sparse f64 == dense f64 on a subsample
         ref = batched_cycle_time(edge_batch_to_dense(eb)[:2])
@@ -127,19 +161,22 @@ def bench_scoring() -> Dict[str, Dict[str, float]]:
 
         print(
             f"sparse_search,score,{n},{b},{eb.max_edges},{approx}{dense_ms:.2f},"
-            f"{sp64_ms:.2f},{sp32_ms:.2f},{jax_str}"
+            f"{sp64_ms:.2f},{sp32_ms:.2f},{jax_str},{engine}"
         )
-        best_sparse = min(sp64_ms, sp32_ms, spjax_ms)
+        best_sparse = min(sp64_ms, sp32_ms, spjax_ms, padded_ms)
         out[f"N{n}"] = {
             "batch": b,
             "edges": eb.max_edges,
             "dense_f32_ms": dense_ms,
             "sparse_f64_ms": sp64_ms,
             "sparse_f32_ms": sp32_ms,
-            "sparse_jax_ms": spjax_ms if math.isfinite(spjax_ms) else None,
+            "sparse_jax_xla_ms": spjax_ms if math.isfinite(spjax_ms) else None,
+            "sparse_jax_padded_ms": (
+                padded_ms if math.isfinite(padded_ms) else None),
+            "engine": engine,
             "speedup_vs_dense": dense_ms / best_sparse,
         }
-        if n == 1024:
+        if n == 1024 and not smoke:
             print(
                 f"# acceptance N=1024: sparse {best_sparse:.1f} ms vs dense "
                 f"{dense_ms:.1f} ms ({dense_ms / best_sparse:.1f}x)"
@@ -148,7 +185,135 @@ def bench_scoring() -> Dict[str, Dict[str, float]]:
                 f"sparse path ({best_sparse:.1f} ms) does not beat dense "
                 f"({dense_ms:.1f} ms) at N=1024"
             )
+            # the dispatched jax path (padded on CPU) must not lose to
+            # the host-numpy scorer any more
+            host_best = min(sp64_ms, sp32_ms)
+            assert padded_ms < host_best, (
+                f"padded jax path ({padded_ms:.1f} ms) still loses to host "
+                f"numpy ({host_best:.1f} ms) at N=1024"
+            )
     return out
+
+
+def synthetic_clustered_gc(
+    n: int, n_clusters: int, seed: int = 0, comp_ms: float = 5.0
+) -> Tuple[ConnectivityGraph, List[int]]:
+    """Sparse clustered WAN at O(N) connectivity-dict size: contiguous
+    silo-id clusters with a low-latency intra ring + two chords, and
+    high-latency bidirectional border pairs joining consecutive clusters
+    (always including ``(last of c, first of c+1)``, so the identity
+    ring is fully routed and can seed searches).  Returns ``(gc,
+    cluster labels aligned with gc.silos)`` — the hierarchical
+    designer's ``labels`` input."""
+    rng = np.random.default_rng(seed)
+    bounds = np.linspace(0, n, n_clusters + 1).astype(int)
+    members = [list(range(bounds[c], bounds[c + 1]))
+               for c in range(n_clusters)]
+    members = [m for m in members if m]
+    lat: Dict[Tuple[int, int], float] = {}
+    bw: Dict[Tuple[int, int], float] = {}
+
+    def link(a: int, b: int, l: float) -> None:
+        lat[(a, b)] = lat[(b, a)] = l
+        bw[(a, b)] = bw[(b, a)] = float(rng.uniform(0.5, 2.0))
+
+    labels = [0] * n
+    for c, mem in enumerate(members):
+        m = len(mem)
+        for k, a in enumerate(mem):
+            labels[a] = c
+            link(a, mem[(k + 1) % m], float(rng.uniform(1.0, 5.0)))
+            for off in (2, 3):
+                if m > off + 1:
+                    link(a, mem[(k + off) % m], float(rng.uniform(1.0, 5.0)))
+        nxt = members[(c + 1) % len(members)]
+        link(mem[-1], nxt[0], float(rng.uniform(20.0, 60.0)))
+        link(int(mem[rng.integers(m)]), int(nxt[rng.integers(len(nxt))]),
+             float(rng.uniform(20.0, 60.0)))
+    params = {
+        i: SiloParams(comp_ms, float(rng.uniform(5.0, 10.0)),
+                      float(rng.uniform(5.0, 10.0)))
+        for i in range(n)
+    }
+    return ConnectivityGraph(tuple(range(n)), lat, bw, params), labels
+
+
+def _identity_ring(n: int) -> Overlay:
+    return Overlay(
+        name="ring", cycle_time_ms=float("inf"),
+        edges=tuple((i, (i + 1) % n) for i in range(n)))
+
+
+def bench_delta_pricing(smoke: bool = False) -> Dict[str, float]:
+    """Delta-certificate pricing vs the full-Karp oracle inside the same
+    climb: proposals/second at N=1024 (the >= 5x acceptance gate)."""
+    n = 128 if smoke else 1024
+    gc, _ = synthetic_clustered_gc(n, max(2, n // 64), seed=1)
+    M, _ = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    ring = _identity_ring(n)
+
+    def climb(pricing: str, n_steps: int) -> Tuple[float, float, Dict]:
+        stats: Dict[str, int] = {}
+        t0 = time.perf_counter()
+        ov = search_overlays_delta(
+            gc, tp, n_restarts=1, n_steps=n_steps, delta_max=8, seed=0,
+            incumbent=ring, pricing=pricing, stats_out=stats)
+        dt = time.perf_counter() - t0
+        return stats["proposals"] / dt, ov.cycle_time_ms, stats
+
+    delta_rate, delta_tau, stats = climb("delta", 200 if smoke else 2000)
+    full_rate, full_tau, _ = climb("full", 100 if smoke else 60)
+
+    print("# delta-evaluated rewire pricing vs full-Karp oracle")
+    print(f"sparse_search,delta,N,{n},proposals_per_s,{delta_rate:.1f},"
+          f"full_per_s,{full_rate:.1f},speedup,{delta_rate / full_rate:.1f}")
+    print(f"sparse_search,delta,fast,{stats['fast']},propagated,"
+          f"{stats['propagated']},reanchor,{stats['reanchor']},"
+          f"accepts,{stats['accepts']}")
+    assert np.isfinite(delta_tau) and np.isfinite(full_tau)
+    if not smoke:
+        assert delta_rate >= 5.0 * full_rate, (
+            f"delta pricing {delta_rate:.1f} proposals/s is not >= 5x the "
+            f"full-Karp climb {full_rate:.1f} at N={n}")
+    return {
+        "num_silos": n,
+        "delta_proposals_per_s": delta_rate,
+        "full_proposals_per_s": full_rate,
+        "speedup": delta_rate / full_rate,
+        "delta_tau_ms": delta_tau,
+        "full_tau_ms": full_tau,
+        "fast": stats["fast"],
+        "propagated": stats["propagated"],
+        "reanchor": stats["reanchor"],
+    }
+
+
+def bench_hierarchical(smoke: bool = False) -> Dict[str, float]:
+    """N~10^4-scale design: the hierarchical search must complete on a
+    4096-silo clustered WAN and return a strongly-connected overlay."""
+    n = 256 if smoke else 4096
+    n_clusters = max(2, n // 64)
+    gc, labels = synthetic_clustered_gc(n, n_clusters, seed=2)
+    M, _ = C.WORKLOADS["inaturalist"]
+    tp = C.TrainingParams(model_size_mbits=M, local_steps=1)
+    t0 = time.perf_counter()
+    ov = search_overlays_hierarchical(
+        gc, tp, labels=labels, n_restarts=1, n_steps=16 if smoke else 24,
+        delta_max=8, seed=0, incumbent=_identity_ring(n))
+    dt = time.perf_counter() - t0
+    print("# hierarchical decomposition at scale")
+    print(f"sparse_search,hier,N,{n},clusters,{n_clusters},"
+          f"tau_ms,{ov.cycle_time_ms:.2f},wall_s,{dt:.1f},"
+          f"edges,{len(ov.edges)}")
+    assert np.isfinite(ov.cycle_time_ms) and ov.cycle_time_ms > 0
+    return {
+        "num_silos": n,
+        "n_clusters": n_clusters,
+        "tau_ms": ov.cycle_time_ms,
+        "wall_s": dt,
+        "edges": len(ov.edges),
+    }
 
 
 def bench_gaia_search(
@@ -205,12 +370,22 @@ def bench_gaia_search(
     }
 
 
-def run() -> Dict[str, Dict]:
-    scoring = bench_scoring()
+def run(smoke: bool = False) -> Dict[str, Dict]:
+    scoring = bench_scoring(smoke=smoke)
     print()
-    gaia = bench_gaia_search()
+    delta = bench_delta_pricing(smoke=smoke)
     print()
-    return {"scoring": scoring, "gaia_search": gaia}
+    hier = bench_hierarchical(smoke=smoke)
+    print()
+    gaia = bench_gaia_search(
+        n_restarts=4 if smoke else 16, n_steps=32 if smoke else 96)
+    print()
+    return {
+        "scoring": scoring,
+        "delta_pricing": delta,
+        "hierarchical": hier,
+        "gaia_search": gaia,
+    }
 
 
 if __name__ == "__main__":

@@ -40,6 +40,24 @@ echo "== tier-1 =="
 # bash < 4.4 (e.g. macOS system bash)
 python -m pytest -x -q --ignore=tests/test_readme_quickstart.py \
   ${FAST_ARGS[@]+"${FAST_ARGS[@]}"} "$@"
+echo "== pallas kernel smoke =="
+# The Pallas segment-max kernel must stay bit-identical to
+# jax.ops.segment_max (interpret mode on CPU; the compiled-TPU path is
+# the same kernel body).  A one-liner so kernel drift fails loudly even
+# when the kernel test file is deselected.
+python - <<'PY'
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels.segment_max import edge_segment_max_pallas
+rng = np.random.default_rng(0)
+vals = rng.standard_normal((4, 96)).astype(np.float32)
+vals[rng.random((4, 96)) < 0.2] = -np.inf
+ids = rng.integers(-1, 33, size=(4, 96)).astype(np.int32)
+got = edge_segment_max_pallas(vals, ids, 32, interpret=True)
+ref = jax.vmap(lambda v, i: jax.ops.segment_max(v, i, num_segments=32))(
+    jnp.asarray(vals), jnp.asarray(ids))
+np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+print("pallas segment-max == jax.ops.segment_max (bitwise)")
+PY
 echo "== bench smoke =="
 # Seconds-scale pass over the smoke-capable benchmarks (tiny grids, perf
 # asserts off, correctness asserts on) so bench code cannot silently rot.

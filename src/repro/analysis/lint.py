@@ -46,14 +46,15 @@ class LintConfig:
     hot_prefixes: Tuple[str, ...] = (
         "src/repro/core/", "src/repro/fed/", "src/repro/dynamics/",
         "src/repro/kernels/", "src/repro/launch/")
-    # The four engine modules: dtype-less constructions are flagged and
+    # The engine modules: dtype-less constructions are flagged and
     # every public function must carry a @contract.
     engine_modules: Tuple[str, ...] = (
         "src/repro/core/maxplus_vec.py",
         "src/repro/core/maxplus_sparse.py",
         "src/repro/core/delays.py",
         "src/repro/core/schedule.py",
-        "src/repro/core/mixing.py")
+        "src/repro/core/mixing.py",
+        "src/repro/kernels/segment_max.py")
     # The one module allowed to define the -inf sentinel.
     sentinel_home: str = "src/repro/core/maxplus_vec.py"
     sentinel_names: Tuple[str, ...] = ("NEG_INF", "_NEG_INF")

@@ -97,6 +97,9 @@ from .topologies import (
     brute_force_mct,
     evaluate_overlay,
     search_overlays_jit,
+    search_overlays_delta,
+    search_overlays_hierarchical,
+    cluster_silos,
     OVERLAY_KINDS,
 )
 from .matcha import Matcha, matcha_from_connectivity, matcha_plus_from_underlay, greedy_edge_coloring

@@ -55,7 +55,7 @@ with the larger value).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -236,6 +236,56 @@ def batched_cycle_time_sparse(
     return out
 
 
+@contract("N", "E", "B")
+def cycle_time_engine(num_nodes: int, num_edges: int, batch: int) -> str:
+    """Pick the winning Karp engine for a scoring problem size.
+
+    The dense ``[B, N, N]`` sweep beats the edge-list segment max at
+    small N (BENCH_sparse_search.json: 124 ms vs 196 ms at N=64 — short
+    contiguous rows amortize better than argsort+reduceat segments)
+    and loses badly once E ≪ N² (678 ms vs 414 ms at N=256, 12.6 s vs
+    2.0 s at N=1024).  The measured crossover sits between N=64 and
+    N=256; the heuristic also keeps dense whenever the edge list is
+    nearly square (E ≥ N²/4), where segment bookkeeping is pure
+    overhead.  Returns ``"dense"`` or ``"sparse"``.
+    """
+    n, e = int(num_nodes), int(num_edges)
+    if n <= 128 or e * 4 >= n * n:
+        return "dense"
+    return "sparse"
+
+
+@contract("eb[B,E,N]", ret="[B]")
+def batched_cycle_time_auto(
+    eb: EdgeBatch, *, dtype: Optional[np.dtype] = None
+) -> np.ndarray:
+    """Size-dispatched exact cycle time: dense engine below the
+    crossover of :func:`cycle_time_engine`, edge-list engine above.
+
+    Both engines run the same f64 Karp DP, so the dispatch never
+    changes results, only wall clock (the equivalence suite asserts
+    bit identity between them).  This is the scoring entry point the
+    searches re-price final candidates through.
+    """
+    B, E = eb.src.shape
+    N = eb.num_nodes
+    if cycle_time_engine(N, E, B) == "sparse":
+        return batched_cycle_time_sparse(eb, dtype=dtype)
+    from .maxplus_vec import batched_cycle_time
+
+    dt = np.dtype(dtype or eb.w.dtype)
+    W = np.full((B, N, N), NEG_INF, dtype=dt)
+    present = ~missing_mask(eb.w)
+    bb = np.broadcast_to(np.arange(B)[:, None], eb.src.shape)
+    # Parallel arcs collapse under max — same semantics as the sparse
+    # segment reduction.
+    np.maximum.at(
+        W, (bb[present], eb.src[present], eb.dst[present]),
+        eb.w.astype(dt, copy=False)[present],
+    )
+    return np.atleast_1d(batched_cycle_time(W, dtype=dt))
+
+
 def _sparse_karp_chunk(eb: EdgeBatch, dtype: np.dtype) -> np.ndarray:
     B, E = eb.src.shape
     N = eb.num_nodes
@@ -270,8 +320,52 @@ def cycle_time_sparse(
 # Batched Karp (JAX)
 
 
-@contract("[B,E]", "[B,E]", "[B,E]", "N", ret="[B]")
-def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int):
+def _padded_edge_layout(src, dst, w, num_nodes: int, max_in_degree: int):
+    """``[B, N*D]`` gather layout for the degree-padded segment max.
+
+    For each destination ``v`` its (up to ``D``) present in-arcs occupy
+    slots ``v*D .. v*D+D-1`` as (source index, weight); unused slots
+    point at node 0 with ``-inf`` weight so they fold away under max.
+    Absent arcs (``-inf`` weight) never consume a slot.  Present arcs
+    beyond ``D`` per destination are silently dropped — callers must
+    guarantee the in-degree bound (the rewire climb passes its degree
+    cap plus transient headroom).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    B, E = src.shape
+    N, D = int(num_nodes), int(max_in_degree)
+    src = jnp.asarray(src, dtype=jnp.int32)
+    dst = jnp.asarray(dst, dtype=jnp.int32)
+    w = jnp.asarray(w)
+    # Absent arcs sort into a virtual segment N so real arcs of a
+    # destination are ranked only against each other.
+    key = jnp.where(jnp.isneginf(w), N, dst).astype(jnp.int32)
+    order = jnp.argsort(key, axis=1, stable=True)
+    sd = jnp.take_along_axis(key, order, axis=1)
+    ss = jnp.take_along_axis(src, order, axis=1)
+    ws = jnp.take_along_axis(w, order, axis=1)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, row, side="left"))(sd)
+    rank = jnp.arange(E, dtype=jnp.int32)[None, :] - first.astype(jnp.int32)
+    slot = jnp.where((rank < D) & (sd < N), sd * D + rank, N * D)
+    table = jnp.full((B, N * D + 1), E, dtype=jnp.int32)
+    table = table.at[
+        jnp.arange(B, dtype=jnp.int32)[:, None], slot
+    ].set(jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None, :], (B, E)))
+    table = table[:, : N * D]
+    ssp = jnp.concatenate([ss, jnp.zeros((B, 1), dtype=ss.dtype)], axis=1)
+    wsp = jnp.concatenate(
+        [ws, jnp.full((B, 1), NEG_INF, dtype=w.dtype)], axis=1)
+    gsrc = jnp.take_along_axis(ssp, table, axis=1)
+    gw = jnp.take_along_axis(wsp, table, axis=1)
+    return gsrc, gw
+
+
+@contract("[B,E]", "[B,E]", "[B,E]", "N", ret="[B]", max_in_degree="*D")
+def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int, *,
+                                  kernel: str = "auto",
+                                  max_in_degree=None):
     """Jittable JAX version of :func:`batched_cycle_time_sparse`.
 
     Parameters
@@ -283,6 +377,17 @@ def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int):
     num_nodes:
         N — must be static under ``jax.jit`` (it fixes the scan length
         and the segment count).
+    kernel:
+        Segment-max implementation: ``"auto"`` (Pallas on TPU, the
+        degree-padded gather when ``max_in_degree`` is given, else
+        ``jax.ops.segment_max``), or an explicit ``"xla"`` /
+        ``"padded"`` / ``"pallas"``.  All choices are bit-identical for
+        NaN-free inputs (``"padded"`` additionally requires the
+        in-degree bound to hold).
+    max_in_degree:
+        Static bound on per-destination present-arc count, enabling the
+        ``"padded"`` formulation that sidesteps XLA's serial
+        scatter-max on CPU.
 
     Returns
     -------
@@ -293,18 +398,46 @@ def batched_cycle_time_sparse_jax(src, dst, w, num_nodes: int):
     import jax
     import jax.numpy as jnp
 
+    from ..kernels.segment_max import (
+        edge_segment_max_pallas,
+        select_segment_max_impl,
+    )
+
     w = jnp.asarray(w)
     B, E = src.shape
     N = int(num_nodes)
-    seg_ids = (jnp.arange(B, dtype=jnp.int32)[:, None] * N + dst).ravel()
+    impl = select_segment_max_impl(
+        kernel, padded=max_in_degree is not None)
     D0 = jnp.zeros((B, N), dtype=w.dtype)
 
-    def step(cur, _):
-        vals = jnp.take_along_axis(cur, src, axis=1) + w
-        nxt = jax.ops.segment_max(
-            vals.ravel(), seg_ids, num_segments=B * N
-        ).reshape(B, N)
-        return nxt, nxt
+    if impl == "padded":
+        if max_in_degree is None:
+            raise ValueError("kernel='padded' needs max_in_degree")
+        D = int(max_in_degree)
+        gsrc, gw = _padded_edge_layout(src, dst, w, N, D)
+
+        def step(cur, _):
+            vals = jnp.take_along_axis(cur, gsrc, axis=1) + gw
+            nxt = jnp.max(vals.reshape(B, N, D), axis=2)
+            return nxt, nxt
+
+    elif impl == "pallas":
+        seg = jnp.asarray(dst, dtype=jnp.int32)
+
+        def step(cur, _):
+            vals = jnp.take_along_axis(cur, src, axis=1) + w
+            nxt = edge_segment_max_pallas(vals, seg, N)
+            return nxt, nxt
+
+    else:  # "xla"
+        seg_ids = (jnp.arange(B, dtype=jnp.int32)[:, None] * N + dst).ravel()
+
+        def step(cur, _):
+            vals = jnp.take_along_axis(cur, src, axis=1) + w
+            nxt = jax.ops.segment_max(
+                vals.ravel(), seg_ids, num_segments=B * N
+            ).reshape(B, N)
+            return nxt, nxt
 
     _, levels = jax.lax.scan(step, D0, None, length=N)  # D_1..D_N
     Dn = levels[-1]
@@ -514,7 +647,9 @@ def timing_recursion_time_varying_sparse(
 
 
 @contract("[E]", "[E]", "[C,R,E]", "N", "*[C,N]", ret="[C,R+1,N]")
-def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=None):
+def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int,
+                                             t0=None, *,
+                                             kernel: str = "auto"):
     """Jittable JAX twin of :func:`timing_recursion_time_varying_sparse`.
 
     Same contract (``src``/``dst`` ``[E]``, ``w`` ``[C, R, E]``, returns
@@ -523,16 +658,24 @@ def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=Non
     computation.  ``num_nodes`` must be static under ``jax.jit``.
     Assumes every vertex has a present self-loop each round (true for
     Eq. 3 pricing, whose computation self-loops are always active) — the
-    per-round carry-over special case is host-path-only.
+    per-round carry-over special case is host-path-only.  ``kernel``
+    picks the segment-max implementation (``"auto"`` = Pallas on TPU,
+    ``jax.ops.segment_max`` elsewhere; bit-identical either way).
     """
     import jax
     import jax.numpy as jnp
+
+    from ..kernels.segment_max import (
+        edge_segment_max_pallas,
+        select_segment_max_impl,
+    )
 
     w = jnp.asarray(w)
     C, R, E = w.shape
     N = int(num_nodes)
     src = jnp.asarray(src, dtype=jnp.int32)
     dst = jnp.asarray(dst, dtype=jnp.int32)
+    impl = select_segment_max_impl(kernel)
     seg_ids = (jnp.arange(C, dtype=jnp.int32)[:, None] * N + dst[None, :]).ravel()
     t0 = (
         jnp.zeros((C, N), dtype=w.dtype)
@@ -540,12 +683,22 @@ def timing_recursion_time_varying_sparse_jax(src, dst, w, num_nodes: int, t0=Non
         else jnp.asarray(t0, dtype=w.dtype)
     )
 
-    def step(t, wk):
-        vals = t[:, src] + wk
-        nxt = jax.ops.segment_max(
-            vals.ravel(), seg_ids, num_segments=C * N
-        ).reshape(C, N)
-        return nxt, nxt
+    if impl == "pallas":
+        seg_rows = jnp.broadcast_to(dst[None, :], (C, E))
+
+        def step(t, wk):
+            vals = t[:, src] + wk
+            nxt = edge_segment_max_pallas(vals, seg_rows, N)
+            return nxt, nxt
+
+    else:
+
+        def step(t, wk):
+            vals = t[:, src] + wk
+            nxt = jax.ops.segment_max(
+                vals.ravel(), seg_ids, num_segments=C * N
+            ).reshape(C, N)
+            return nxt, nxt
 
     _, levels = jax.lax.scan(step, t0, jnp.swapaxes(w, 0, 1))  # [R, C, N]
     return jnp.concatenate([t0[:, None, :], jnp.swapaxes(levels, 0, 1)], axis=1)
@@ -633,6 +786,26 @@ def scc_labels_sparse(
         ncomp += 1
 
 
+def _reduced_potentials(
+    s: np.ndarray, d: np.ndarray, wr: np.ndarray, N: int, eps: float
+) -> np.ndarray:
+    """Longest-path potentials under reduced weights ``wr = w - tau``.
+
+    With every cycle's reduced mean <= 0 the sweep reaches its fixed
+    point within N iterations; the result satisfies the feasibility
+    certificate ``pot[s] + wr <= pot[d]`` (up to ``eps``) on every arc.
+    """
+    seg = _segments_by(d)
+    pot = np.zeros(N, dtype=np.float64)
+    for _ in range(N):
+        cand = _segment_max(pot[s] + wr, seg, N, np.float64)
+        nxt = np.maximum(pot, cand)
+        if np.all(nxt <= pot + eps):
+            return nxt
+        pot = nxt
+    return pot
+
+
 @contract("[E]", "[E]", "[E]", "N")
 def critical_circuit_sparse(
     src: np.ndarray,
@@ -675,15 +848,7 @@ def critical_circuit_sparse(
     s, d = src[present], dst[present]
     wr = w[present] - tau
     eps = 1e-9 * max(1.0, abs(tau))
-    seg = _segments_by(d)
-    pot = np.zeros(N, dtype=np.float64)
-    for _ in range(N):
-        cand = _segment_max(pot[s] + wr, seg, N, np.float64)
-        nxt = np.maximum(pot, cand)
-        if np.all(nxt <= pot + eps):
-            pot = nxt
-            break
-        pot = nxt
+    pot = _reduced_potentials(s, d, wr, N, eps)
     tight = pot[s] + wr >= pot[d] - 10 * eps
     ts, td = s[tight], d[tight]
     if ts.size == 0:  # numerically degenerate; caller falls back to dense
@@ -737,6 +902,288 @@ def _reach_one(
         if np.array_equal(new, reach):
             return reach
         reach = new
+
+
+# ---------------------------------------------------------------------------
+# Delta-evaluated cycle-time pricing (incremental re-pricing for rewire
+# searches: a move touches O(deg) arcs, so most proposals re-price in
+# O(deg) instead of a full O(N·E) Karp pass)
+
+
+class PricedMove(NamedTuple):
+    """The result of :meth:`DeltaPricer.price` — pass to
+    :meth:`DeltaPricer.commit` to apply the move.
+
+    ``tau`` is the exact max cycle mean of the *proposed* graph; ``kind``
+    records which pricing path produced it (``"fast"``: certificate
+    untouched, O(changed arcs); ``"propagated"``: local potential
+    repair from the touched endpoints; ``"reanchor"``: full Karp)."""
+
+    tau: float
+    kind: str
+    slots: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    pot: Optional[np.ndarray]
+    crit_arcs: Optional[frozenset]
+
+
+class DeltaPricer:
+    """Incremental max-cycle-mean pricing of one edge-list digraph under
+    a stream of arc rewires (the hill-climb hot loop).
+
+    The pricer maintains, alongside the graph itself, a *certificate* of
+    its cycle time tau: longest-path potentials ``pot`` under the reduced
+    weights ``w - tau`` (feasibility ``pot[s] + w - tau <= pot[d]`` on
+    every arc proves every cycle mean <= tau) and one cached critical
+    circuit attaining tau (proving some cycle mean == tau).  A proposed
+    move — any set of slot rewrites ``(slot, src', dst', w')`` — is then
+    priced by checking how it interacts with the certificate:
+
+    * arcs it *weakens* (weight drop / removal / endpoint change) can
+      only lower cycle means; if none lies on the cached critical
+      circuit, that circuit still attains tau — the lower bound stands;
+    * arcs it *strengthens* can only raise cycle means; each is checked
+      against the potentials, and violations trigger a bounded local
+      propagation (Bellman sweeps from the touched endpoints only).  If
+      the propagation converges, the upper bound is repaired at the same
+      tau; if any vertex updates more than N times there is a positive
+      reduced cycle, i.e. tau genuinely rose.
+
+    Only when a bound actually breaks (critical arc weakened, or a
+    positive cycle appears) does the pricer fall back to a full Karp
+    re-anchor (:func:`batched_cycle_time_sparse` — the equivalence
+    oracle) on the proposed graph.  Random rewire proposals touch the
+    certificate with probability ~deg/E, so the common case prices in
+    O(deg) work: the order-of-magnitude that makes hill climbs feasible
+    at N ~ 10^4.
+
+    Exactness: the returned tau always equals full-Karp-from-scratch on
+    the current graph, up to the feasibility tolerance ``eps`` (scale ×
+    1e-9); on the fast paths it *is* the previously anchored Karp value,
+    bit-for-bit (``tests/test_delta_pricing.py`` property-checks bit
+    equality in f64 over random move sequences, including moves that
+    disconnect and reconnect the graph).
+
+    Not thread-safe; one pricer per climb state.
+    """
+
+    def __init__(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        w: np.ndarray,
+        num_nodes: int,
+        *,
+        dtype=np.float64,
+    ):
+        self.num_nodes = int(num_nodes)
+        self._dtype = np.dtype(dtype)
+        self._src = np.array(src, dtype=np.int64)
+        self._dst = np.array(dst, dtype=np.int64)
+        self._w = np.array(w, dtype=self._dtype)
+        if not (self._src.ndim == 1 and self._src.shape == self._dst.shape
+                == self._w.shape):
+            raise ValueError("DeltaPricer expects flat [S] slot arrays")
+        self.stats = {"fast": 0, "propagated": 0, "reanchor": 0}
+        self._csr_dirty = True
+        self._tau, self._pot, self._crit_arcs, self._eps = self._anchor(
+            self._src, self._dst, self._w
+        )
+
+    # -- public surface ----------------------------------------------------
+
+    @property
+    def tau(self) -> float:
+        """Exact max cycle mean of the current graph."""
+        return self._tau
+
+    def graph(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, w) copies of the current slot arrays."""
+        return self._src.copy(), self._dst.copy(), self._w.copy()
+
+    def price(self, slots, src, dst, w, *, force_full: bool = False) -> PricedMove:
+        """Price the graph obtained by rewriting ``slots`` to the given
+        endpoints/weights (``w = -inf`` empties a slot), without
+        committing.  All four are parallel flat arrays.  ``force_full``
+        bypasses the certificate and runs the full-Karp oracle (the
+        benchmark's baseline arm, and a drift bound for f32 pricers)."""
+        slots = np.asarray(slots, dtype=np.int64)
+        src2 = np.asarray(src, dtype=np.int64)
+        dst2 = np.asarray(dst, dtype=np.int64)
+        w2 = np.asarray(w, dtype=self._dtype)
+        if force_full:
+            return self._price_full(slots, src2, dst2, w2)
+        s0, d0, w0 = self._src[slots], self._dst[slots], self._w[slots]
+        moved = (s0 != src2) | (d0 != dst2)
+        present0 = w0 > NEG_INF
+        present2 = w2 > NEG_INF
+        weakened = present0 & (moved | (w2 < w0))
+        strengthened = present2 & (moved | ~present0 | (w2 > w0))
+        crit_hit = self._crit_arcs is None or any(
+            (int(a), int(b)) in self._crit_arcs
+            for a, b in zip(s0[weakened], d0[weakened])
+        )
+        if missing_mask(self._tau):
+            # Acyclic graph: weakening keeps it acyclic; any strengthened
+            # arc may close a cycle — no potentials to reason with.
+            if not strengthened.any():
+                return PricedMove(self._tau, "fast", slots, src2, dst2, w2,
+                                  None, None)
+            return self._price_full(slots, src2, dst2, w2)
+        if crit_hit and weakened.any():
+            return self._price_full(slots, src2, dst2, w2)
+        wf = w2.astype(np.float64, copy=False)
+        viol = strengthened & (
+            self._pot[src2] + wf - self._tau > self._pot[dst2] + self._eps
+        )
+        if not viol.any():
+            return PricedMove(self._tau, "fast", slots, src2, dst2, w2,
+                              None, None)
+        pot2 = self._propagate(slots, src2, dst2, w2, viol)
+        if pot2 is None:  # positive reduced cycle: tau rose
+            return self._price_full(slots, src2, dst2, w2)
+        return PricedMove(self._tau, "propagated", slots, src2, dst2, w2,
+                          pot2, None)
+
+    def commit(self, priced: PricedMove) -> None:
+        """Apply a :meth:`price` result to the pricer state."""
+        self.stats[priced.kind] += 1
+        if ((self._src[priced.slots] != priced.src).any()
+                or (self._dst[priced.slots] != priced.dst).any()):
+            self._csr_dirty = True
+        self._src[priced.slots] = priced.src
+        self._dst[priced.slots] = priced.dst
+        self._w[priced.slots] = priced.w
+        self._tau = priced.tau
+        if priced.pot is not None:
+            self._pot = priced.pot
+        if priced.kind == "reanchor":
+            self._crit_arcs = priced.crit_arcs
+            scale = max(1.0, abs(priced.tau) if np.isfinite(priced.tau)
+                        else 1.0)
+            self._eps = (1e-9 if self._dtype.itemsize >= 8 else 1e-4) * scale
+
+    def update(self, slots, src, dst, w) -> float:
+        """``price`` + ``commit`` in one call; returns the new tau."""
+        priced = self.price(slots, src, dst, w)
+        self.commit(priced)
+        return priced.tau
+
+    def reanchor(self) -> float:
+        """Rebuild the certificate from scratch on the current graph
+        (periodic drift bound: under f32 slot weights the fast paths
+        carry the anchored tau forward, so a caller can re-anchor every
+        K commits to keep accumulated decision error at one oracle call
+        of slack).  Returns the re-anchored tau."""
+        self._tau, self._pot, self._crit_arcs, self._eps = self._anchor(
+            self._src, self._dst, self._w
+        )
+        self.stats["reanchor"] += 1
+        return self._tau
+
+    # -- internals ---------------------------------------------------------
+
+    def _anchor(self, src, dst, w):
+        """Full Karp + certificate rebuild on the given arrays (pure —
+        does not touch pricer state).  Returns (tau, pot, crit, eps)."""
+        N = self.num_nodes
+        eb = EdgeBatch(
+            src[None].astype(np.int32), dst[None].astype(np.int32),
+            w[None], N,
+        )
+        tau = float(batched_cycle_time_sparse(eb)[0])
+        scale = max(1.0, abs(tau) if np.isfinite(tau) else 1.0)
+        eps = (1e-9 if self._dtype.itemsize >= 8 else 1e-4) * scale
+        if missing_mask(tau):
+            pot = np.zeros(N, dtype=np.float64)
+            crit: Optional[frozenset] = frozenset()
+        else:
+            wf = w.astype(np.float64, copy=False)
+            present = wf > NEG_INF
+            s, d = src[present], dst[present]
+            pot = _reduced_potentials(s, d, wf[present] - tau, N, eps)
+            _, circuit = critical_circuit_sparse(src, dst, wf, N, tau=tau)
+            # Empty circuit on a cyclic graph = numerically degenerate
+            # extraction; None = "unknown": every weakening re-anchors.
+            crit = (
+                frozenset(zip(circuit[:-1], circuit[1:])) if circuit else None
+            )
+        return tau, pot, crit, eps
+
+    def _price_full(self, slots, src2, dst2, w2) -> PricedMove:
+        """Price a proposal with a full Karp pass on the modified graph."""
+        ps, pd, pw = self._src.copy(), self._dst.copy(), self._w.copy()
+        ps[slots], pd[slots], pw[slots] = src2, dst2, w2
+        tau, pot, crit, _ = self._anchor(ps, pd, pw)
+        return PricedMove(tau, "reanchor", slots, src2, dst2, w2, pot, crit)
+
+    def _rebuild_csr(self) -> None:
+        order = np.argsort(self._src, kind="stable")
+        self._csr_slots = order
+        self._csr_start = np.searchsorted(
+            self._src[order], np.arange(self.num_nodes + 1)
+        )
+        self._csr_dirty = False
+
+    def _propagate(self, slots, src2, dst2, w2, viol) -> Optional[np.ndarray]:
+        """Bounded Bellman repair of the potentials on the proposed graph.
+
+        Returns the repaired potentials, or ``None`` if a vertex updated
+        more than N times (a positive reduced cycle: tau increased)."""
+        if self._csr_dirty:
+            self._rebuild_csr()
+        N = self.num_nodes
+        tau, eps = self._tau, self._eps
+        pot2 = self._pot.copy()
+        moved_slots = {int(s): k for k, s in enumerate(slots)}
+        wf = w2.astype(np.float64, copy=False)
+        frontier: Dict[int, float] = {}
+        for k in np.flatnonzero(viol):
+            d = int(dst2[k])
+            # host numpy throughout: no device sync to batch
+            cand = self._pot[int(src2[k])] + float(wf[k]) - tau  # repro-lint: ignore[trace-safety]
+            if cand > frontier.get(d, NEG_INF):
+                frontier[d] = cand
+        counts: Dict[int, int] = {}
+        csr_slots, csr_start = self._csr_slots, self._csr_start
+        cur_src, cur_dst, cur_w = self._src, self._dst, self._w
+        while frontier:
+            nxt: Dict[int, float] = {}
+            for u, p in frontier.items():
+                if p <= pot2[u] + eps:
+                    continue
+                pot2[u] = p
+                c = counts.get(u, 0) + 1
+                if c > N:
+                    return None
+                counts[u] = c
+                # out-arcs of u in the *proposed* graph: current CSR rows
+                # minus rewritten slots, plus the move's own arcs at u.
+                for slot in csr_slots[csr_start[u]:csr_start[u + 1]]:
+                    k = moved_slots.get(int(slot))
+                    if k is not None:
+                        continue
+                    wv = float(cur_w[slot])  # repro-lint: ignore[trace-safety]
+                    if missing_mask(wv):
+                        continue
+                    v = int(cur_dst[slot])
+                    cand = p + wv - tau
+                    if cand > pot2[v] + eps and cand > nxt.get(v, NEG_INF):
+                        nxt[v] = cand
+                for k, slot in ((k, s) for s, k in moved_slots.items()):
+                    if int(src2[k]) != u:
+                        continue
+                    wv = float(wf[k])  # repro-lint: ignore[trace-safety]
+                    if missing_mask(wv):
+                        continue
+                    v = int(dst2[k])
+                    cand = p + wv - tau
+                    if cand > pot2[v] + eps and cand > nxt.get(v, NEG_INF):
+                        nxt[v] = cand
+            frontier = nxt
+        return pot2
 
 
 # ---------------------------------------------------------------------------

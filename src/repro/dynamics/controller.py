@@ -102,6 +102,11 @@ class ControllerConfig:
     designers: Tuple[str, ...] = ("ring", "ring_2opt", "mst", "delta_mbst")
     rewire_restarts: int = 8  # parallel sparse-rewire climb states (0 = off)
     rewire_steps: int = 48  # device-side rewire moves per restart
+    # Which engine prices the rewire search's proposals: "jit" (device
+    # climb, full Karp per proposal), "delta" (host climb, incremental
+    # DeltaPricer certificates), or "auto" (size-dispatched — delta
+    # above ~384 silos, where per-proposal Karp dominates).
+    rewire_engine: str = "auto"  # "auto" | "jit" | "delta"
     # Randomized-schedule candidates: with a nonempty budget tuple every
     # re-design also prices a MATCHA schedule at these budgets (one
     # batched sweep).  Under ``schedule_family="auto"`` it competes with
@@ -205,6 +210,7 @@ def design_best_overlay(
     incumbent: Optional[Overlay] = None,
     rewire_restarts: int = 0,
     rewire_steps: int = 48,
+    rewire_engine: str = "auto",
 ) -> Tuple[Overlay, int]:
     """(best overlay, number of candidates scored) on the given estimate.
 
@@ -224,6 +230,7 @@ def design_best_overlay(
         incumbent=incumbent,
         rewire_restarts=rewire_restarts,
         rewire_steps=rewire_steps,
+        rewire_engine=rewire_engine,
     )
     if not candidates:
         raise ValueError("no feasible overlay candidate on the current estimate")
@@ -240,6 +247,7 @@ def _overlay_candidates(
     incumbent: Optional[Overlay] = None,
     rewire_restarts: int = 0,
     rewire_steps: int = 48,
+    rewire_engine: str = "auto",
 ) -> Tuple[List[Overlay], int]:
     """The fixed-overlay candidate pool: (feasible candidates, number of
     overlays scored).  Shared by :func:`design_best_overlay` (τ argmin)
@@ -268,6 +276,7 @@ def _overlay_candidates(
                     n_steps=rewire_steps,
                     seed=int(rng.integers(1 << 31)),
                     incumbent=incumbent,
+                    engine=rewire_engine,
                 )
             )
             scored += rewire_restarts * rewire_steps
@@ -288,6 +297,7 @@ def design_schedule_portfolio(
     incumbent: Optional[Overlay] = None,
     rewire_restarts: int = 0,
     rewire_steps: int = 48,
+    rewire_engine: str = "auto",
     matcha_budgets: Sequence[float] = (),
     matcha_rounds: int = 150,
     matcha_seeds: Sequence[int] = (0, 1, 2),
@@ -324,6 +334,7 @@ def design_schedule_portfolio(
         incumbent=incumbent,
         rewire_restarts=rewire_restarts,
         rewire_steps=rewire_steps,
+        rewire_engine=rewire_engine,
     )
     if objective == "time_to_eps" and overlays:
         rhos = overlay_rho_batch(
@@ -372,6 +383,7 @@ def design_best_schedule(
     incumbent: Optional[Overlay] = None,
     rewire_restarts: int = 0,
     rewire_steps: int = 48,
+    rewire_engine: str = "auto",
     matcha_budgets: Sequence[float] = (),
     matcha_rounds: int = 150,
     matcha_seeds: Sequence[int] = (0, 1, 2),
@@ -399,6 +411,7 @@ def design_best_schedule(
         incumbent=incumbent,
         rewire_restarts=rewire_restarts,
         rewire_steps=rewire_steps,
+        rewire_engine=rewire_engine,
         matcha_budgets=matcha_budgets,
         matcha_rounds=matcha_rounds,
         matcha_seeds=matcha_seeds,
@@ -736,6 +749,7 @@ class OnlineTopologyController:
                 incumbent=self.overlay,
                 rewire_restarts=self.config.rewire_restarts,
                 rewire_steps=self.config.rewire_steps,
+                rewire_engine=self.config.rewire_engine,
                 matcha_budgets=self.config.matcha_budgets,
                 matcha_rounds=self.config.matcha_rounds,
                 matcha_seeds=self.config.matcha_seeds,

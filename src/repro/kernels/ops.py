@@ -17,6 +17,7 @@ from ._interpret import interpret_default as _interpret_default, resolve_interpr
 from .flash_attention import flash_attention_pallas
 from .gossip_mix import gossip_mix_pallas
 from .mlstm_scan import mlstm_scan_pallas
+from .segment_max import edge_segment_max_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
@@ -49,3 +50,15 @@ def gossip_mix(neighbor_blocks: jax.Array, weights: jax.Array, *,
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk: int = 128):
     return mlstm_scan_pallas(q, k, v, log_i, log_f, chunk=chunk,
                              interpret=_interpret_default())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "block", "n_block", "interpret"))
+def edge_segment_max(vals: jax.Array, seg_ids: jax.Array, *,
+                     num_segments: int, block: int = 512,
+                     n_block: int = 512,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    return edge_segment_max_pallas(
+        vals, seg_ids, num_segments, block=block, n_block=n_block,
+        interpret=resolve_interpret(interpret))

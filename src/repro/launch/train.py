@@ -67,11 +67,16 @@ def main() -> int:
                          "membership is elastic: on SiloJoin/SiloLeave the "
                          "mesh/state are rebuilt over the surviving silos)")
     ap.add_argument("--designer", default="auto",
-                    choices=["auto", "sparse-rewire", "matcha"],
+                    choices=["auto", "sparse-rewire", "delta-rewire",
+                             "hierarchical", "matcha"],
                     help="overlay designer: 'sparse-rewire' designs the "
-                         "initial overlay with the jitted rewire search "
-                         "(needs --dynamic) and keeps it in the "
-                         "controller's re-design pool; 'matcha' trains on "
+                         "initial overlay with the rewire search behind "
+                         "its size-dispatched engine (needs --dynamic) "
+                         "and keeps it in the controller's re-design "
+                         "pool; 'delta-rewire' forces the host "
+                         "delta-priced climb; 'hierarchical' clusters "
+                         "the silos and composes per-cluster searches "
+                         "(both need --dynamic); 'matcha' trains on "
                          "a randomized schedule (per-round sampled gossip "
                          "plans; with --dynamic the budget is swept on "
                          "the measured underlay and re-fit on drift); "
@@ -214,8 +219,9 @@ def main() -> int:
         M, Tc = WORKLOADS[args.workload]
         tp = TrainingParams(model_size_mbits=M, local_steps=args.local_steps)
         gc0 = underlay.connectivity_graph(comp_time_ms=Tc)
-        if args.designer == "sparse-rewire":
-            kind = "sparse_rewire"
+        if args.designer in ("sparse-rewire", "delta-rewire",
+                             "hierarchical"):
+            kind = args.designer.replace("-", "_")
         else:
             kind = args.topology if args.topology in OVERLAY_KINDS else "ring"
         overlay = design_overlay(kind, gc0, tp)
@@ -291,9 +297,10 @@ def main() -> int:
         # Without --dynamic there are no network measurements to design
         # from; the measurement-based kinds fall back to their homogeneous
         # mesh equivalents.
-        if args.designer == "sparse-rewire":
+        if args.designer in ("sparse-rewire", "delta-rewire",
+                             "hierarchical"):
             log.warn("designer-ignored",
-                     "--designer sparse-rewire needs --dynamic "
+                     f"--designer {args.designer} needs --dynamic "
                      "(network measurements)")
         plan = None
         if args.designer == "matcha" and n > 1:
