@@ -26,10 +26,24 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
          "property tests will use the compat-shim sweeps" >&2
 fi
 # Lint gate: project-invariant static checks (trace safety, RNG
-# discipline, NEG_INF sentinel, dtype discipline, engine contracts)
-# against the committed baseline.  Runs in --fast too: it is seconds.
+# discipline, NEG_INF sentinel, dtype discipline, engine contracts,
+# protocol typestate) against the committed baseline.  The fast lane
+# checks only files changed vs the git merge base (the whole tree is
+# still parsed for cross-file facts); the full lane lints everything
+# and must finish inside its 30 s wall-clock budget — if it doesn't,
+# the lint layer has regressed and the budget assert fails the run.
 echo "== repro-lint =="
-python scripts/lint_repro.py
+LINT_START=$SECONDS
+if [[ "$FAST" == 1 ]]; then
+  python scripts/lint_repro.py --changed
+else
+  python scripts/lint_repro.py
+  LINT_TOOK=$((SECONDS - LINT_START))
+  if (( LINT_TOOK >= 30 )); then
+    echo "repro-lint: full lint took ${LINT_TOOK}s (budget: 30s)" >&2
+    exit 1
+  fi
+fi
 # Docs gate first: the README quickstart must run as-is and docs/ must
 # not reference dead file paths (tests/test_readme_quickstart.py).
 echo "== docs gate =="

@@ -23,14 +23,18 @@ from __future__ import annotations
 
 import argparse
 import ast
+import hashlib
+import json
 import os
 import re
+import subprocess
 import sys
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 __all__ = ["LintConfig", "Violation", "FileCtx", "Project", "lint_paths",
-           "lint_files", "lint_source", "load_baseline", "main"]
+           "lint_files", "lint_source", "load_baseline", "changed_paths",
+           "main"]
 
 
 # ---------------------------------------------------------------------------
@@ -326,10 +330,14 @@ def _norm(path: str, root: Optional[str]) -> str:
     return path.replace(os.sep, "/")
 
 
-def lint_files(files: Sequence[Tuple[str, str]],
-               config: Optional[LintConfig] = None) -> List[Violation]:
-    """Lint (path, source) pairs sharing one cross-file view."""
-    config = config or LintConfig()
+def _parse_ctxs(files: Sequence[Tuple[str, str]], config: LintConfig,
+                ) -> Tuple[List[FileCtx], List[Violation]]:
+    """Parse every file and build the shared cross-file Project view.
+
+    Parsing is the cheap phase (fractions of a second for the whole
+    tree) and MUST cover every file even when only a subset is checked:
+    ``traced_root_names`` is a project-wide fact — a function jitted
+    from another module is traced no matter which files changed."""
     project = Project()
     ctxs: List[FileCtx] = []
     violations: List[Violation] = []
@@ -347,13 +355,26 @@ def lint_files(files: Sequence[Tuple[str, str]],
         _build_maps(ctx)
         project.traced_root_names |= collect_traced_roots(tree)
         ctxs.append(ctx)
+    return ctxs, violations
 
+
+def _check_ctx(ctx: FileCtx, rules: Sequence) -> List[Violation]:
+    out: List[Violation] = []
+    for rule in rules:
+        for v in rule.check(ctx):
+            if not _suppressed(ctx, v):
+                out.append(v)
+    return out
+
+
+def lint_files(files: Sequence[Tuple[str, str]],
+               config: Optional[LintConfig] = None) -> List[Violation]:
+    """Lint (path, source) pairs sharing one cross-file view."""
+    config = config or LintConfig()
+    ctxs, violations = _parse_ctxs(files, config)
     rules = _all_rules()
     for ctx in ctxs:
-        for rule in rules:
-            for v in rule.check(ctx):
-                if not _suppressed(ctx, v):
-                    violations.append(v)
+        violations.extend(_check_ctx(ctx, rules))
     violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
     return violations
 
@@ -393,6 +414,149 @@ def lint_paths(paths: Sequence[str], root: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# Incremental mode: hash-keyed result cache + git changed-file selection
+# ---------------------------------------------------------------------------
+
+_CACHE_NAME = ".repro_lint_cache.json"
+
+
+def _rules_digest() -> str:
+    """Hash of the analysis package's own sources.
+
+    Any edit to a rule, the engine, dataflow, or the protocol machines
+    changes this digest and invalidates every cached result — a stale
+    verdict from an older linter must never survive."""
+    pkg_dir = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, dirnames, filenames in os.walk(pkg_dir):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                h.update(fname.encode("utf-8"))
+                with open(os.path.join(dirpath, fname), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def lint_paths_cached(paths: Sequence[str], root: Optional[str] = None,
+                      config: Optional[LintConfig] = None,
+                      cache_path: Optional[str] = None,
+                      only: Optional[Set[str]] = None,
+                      ) -> Tuple[List[Violation], int, int]:
+    """Like :func:`lint_paths` with per-file result caching.
+
+    Every file is still *parsed* (the cross-file traced-roots view must
+    be complete) but rules re-run only for files whose content hash
+    missed the cache.  The cache carries a context digest over the
+    analysis package sources, the config, and the project traced-root
+    set, so a rule edit — or an edit anywhere that changes which
+    functions are traced — invalidates everything at once rather than
+    serving unsound per-file hits.
+
+    ``only`` restricts which repo-relative paths contribute violations
+    (and cache refreshes) — the ``--changed`` mode.  Returns
+    ``(violations, checked, cached)``.
+    """
+    config = config or LintConfig()
+    files = []
+    for fpath in iter_py_files(paths, root):
+        with open(fpath, "r", encoding="utf-8") as fh:
+            files.append((_norm(fpath, root), fh.read()))
+    src_of = dict(files)
+    ctxs, violations = _parse_ctxs(files, config)
+
+    digest = hashlib.sha256()
+    digest.update(_rules_digest().encode("utf-8"))
+    digest.update(repr(config).encode("utf-8"))
+    digest.update(",".join(
+        sorted(ctxs[0].project.traced_root_names) if ctxs else []
+        ).encode("utf-8"))
+    context_digest = digest.hexdigest()
+
+    cached_files: Dict[str, dict] = {}
+    if cache_path and os.path.exists(cache_path):
+        try:
+            with open(cache_path, "r", encoding="utf-8") as fh:
+                on_disk = json.load(fh)
+            if on_disk.get("digest") == context_digest:
+                cached_files = on_disk.get("files", {})
+        except (ValueError, OSError):
+            cached_files = {}
+
+    rules = None
+    next_files: Dict[str, dict] = {}
+    checked = cached = 0
+    for ctx in ctxs:
+        if only is not None and ctx.path not in only:
+            continue
+        file_hash = hashlib.sha256(
+            src_of[ctx.path].encode("utf-8")).hexdigest()
+        entry = cached_files.get(ctx.path)
+        if entry is not None and entry.get("hash") == file_hash:
+            vs = [Violation(**d) for d in entry["violations"]]
+            cached += 1
+        else:
+            if rules is None:
+                rules = _all_rules()
+            vs = _check_ctx(ctx, rules)
+            checked += 1
+        next_files[ctx.path] = {
+            "hash": file_hash, "violations": [asdict(v) for v in vs]}
+        violations.extend(vs)
+
+    if cache_path:
+        # keep entries for files outside `only` so a --changed run does
+        # not evict the full-lint cache
+        merged = dict(cached_files)
+        merged.update(next_files)
+        try:
+            with open(cache_path, "w", encoding="utf-8") as fh:
+                json.dump({"digest": context_digest, "files": merged},
+                          fh)
+        except OSError:
+            pass
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations, checked, cached
+
+
+def changed_paths(root: str, base: Optional[str] = None,
+                  ) -> Optional[List[str]]:
+    """Repo-relative ``.py`` paths changed vs the merge base.
+
+    Compares the working tree against ``merge-base(HEAD, base)`` (first
+    of origin/main, origin/master, main, master when ``base`` is None)
+    and adds untracked files.  Returns None when git is unavailable or
+    no base ref resolves — the caller falls back to a full lint."""
+
+    def _git(*argv: str):
+        try:
+            return subprocess.run(["git", "-C", root, *argv],
+                                  capture_output=True, text=True,
+                                  timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+
+    candidates = [base] if base else ["origin/main", "origin/master",
+                                      "main", "master"]
+    merge_base = None
+    for ref in candidates:
+        r = _git("merge-base", "HEAD", ref)
+        if r is not None and r.returncode == 0:
+            merge_base = r.stdout.strip()
+            break
+    if not merge_base:
+        return None
+    r = _git("diff", "--name-only", merge_base, "--")
+    if r is None or r.returncode != 0:
+        return None
+    names = set(r.stdout.split())
+    r = _git("ls-files", "--others", "--exclude-standard")
+    if r is not None and r.returncode == 0:
+        names |= set(r.stdout.split())
+    return sorted(n for n in names if n.endswith(".py"))
+
+
+# ---------------------------------------------------------------------------
 # Baseline + CLI
 # ---------------------------------------------------------------------------
 
@@ -415,11 +579,18 @@ def write_baseline(path: str, violations: Sequence[Violation]) -> None:
             fh.write(fp + "\n")
 
 
+def _render_annotation(v: Violation) -> str:
+    """One GitHub Actions workflow-command annotation per violation."""
+    msg = f"[{v.rule}] {v.message}"
+    msg = msg.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+    return f"::error file={v.path},line={v.line},col={v.col}::{msg}"
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="lint_repro",
         description="Project-invariant linter (trace safety, RNG, "
-                    "sentinel, dtype, contracts).")
+                    "sentinel, dtype, contracts, protocol typestate).")
     parser.add_argument("paths", nargs="*", default=None,
                         help="files/dirs to lint (default: src tests)")
     parser.add_argument("--root", default=None,
@@ -433,6 +604,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument("--no-baseline", action="store_true",
                         help="report every violation, grandfathered "
                              "or not")
+    parser.add_argument("--changed", action="store_true",
+                        help="check only files changed vs the git merge "
+                             "base (untracked included); the whole tree "
+                             "is still parsed for cross-file facts")
+    parser.add_argument("--base", default=None,
+                        help="git ref for --changed (default: "
+                             "origin/main, then main)")
+    parser.add_argument("--format", choices=("text", "annotations"),
+                        default="text", dest="fmt",
+                        help="'annotations' emits GitHub ::error "
+                             "workflow commands")
+    parser.add_argument("--cache", default=None,
+                        help=f"result cache file "
+                             f"(default: <root>/{_CACHE_NAME})")
+    parser.add_argument("--no-cache", action="store_true",
+                        help="ignore and do not write the result cache")
     args = parser.parse_args(argv)
 
     root = args.root or os.path.abspath(
@@ -441,10 +628,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                            os.path.join(root, "tests")]
     baseline_path = args.baseline or os.path.join(
         root, "scripts", "lint_baseline.txt")
+    cache_path = None if args.no_cache else (
+        args.cache or os.path.join(root, _CACHE_NAME))
 
-    violations = lint_paths(paths, root=root)
+    only: Optional[Set[str]] = None
+    if args.changed:
+        changed = changed_paths(root, base=args.base)
+        if changed is None:
+            print("repro-lint: --changed could not resolve a git merge "
+                  "base; falling back to a full lint", file=sys.stderr)
+        else:
+            only = set(changed)
+
+    violations, checked, cached = lint_paths_cached(
+        paths, root=root, cache_path=cache_path, only=only)
 
     if args.update_baseline:
+        if only is not None:
+            print("repro-lint: refusing --update-baseline with "
+                  "--changed (the baseline must cover the whole tree)",
+                  file=sys.stderr)
+            return 2
         write_baseline(baseline_path, violations)
         print(f"wrote {len({v.fingerprint() for v in violations})} "
               f"fingerprints to {baseline_path}")
@@ -452,24 +656,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     baseline = set() if args.no_baseline else load_baseline(baseline_path)
     fresh = [v for v in violations if v.fingerprint() not in baseline]
-    stale = baseline - {v.fingerprint() for v in violations}
 
+    render = _render_annotation if args.fmt == "annotations" else \
+        Violation.render
     for v in fresh:
-        print(v.render())
+        print(render(v))
+    scope = (f"{checked} checked, {cached} cached"
+             + (f", {len(only)} changed" if only is not None else ""))
     if fresh:
         by_rule: Dict[str, int] = {}
         for v in fresh:
             by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
         summary = ", ".join(f"{k}: {n}" for k, n in sorted(by_rule.items()))
         print(f"repro-lint: {len(fresh)} new violation(s) ({summary}); "
-              f"{len(violations) - len(fresh)} grandfathered.")
+              f"{len(violations) - len(fresh)} grandfathered ({scope}).")
         return 1
-    grandfathered = len(violations)
-    msg = f"repro-lint: clean ({grandfathered} grandfathered)"
-    if stale:
-        msg += (f"; {len(stale)} baseline entr"
-                f"{'y is' if len(stale) == 1 else 'ies are'} stale — "
-                f"consider --update-baseline")
+    msg = f"repro-lint: clean ({len(violations)} grandfathered; {scope})"
+    if only is None:
+        # stale-baseline detection needs the full-tree violation set
+        stale = baseline - {v.fingerprint() for v in violations}
+        if stale:
+            msg += (f"; {len(stale)} baseline entr"
+                    f"{'y is' if len(stale) == 1 else 'ies are'} stale — "
+                    f"consider --update-baseline")
     print(msg)
     return 0
 

@@ -3,6 +3,13 @@
 Each rule is a class with an ``id`` string and a
 ``check(ctx: FileCtx) -> List[Violation]`` method.  Adding a rule means
 writing a module here and appending the class to ``ALL_RULES``.
+
+The four ``*-protocol``/provenance/purity rules added in PR 10 are
+*temporal*: they run typestate machines from
+:mod:`repro.analysis.protocols` over the per-function CFGs of
+:mod:`repro.analysis.dataflow` instead of pattern-matching single
+nodes.  ``PROTOCOL_RULES`` maps their ids to the declarative machines
+so the docs gate can assert the architecture table matches the code.
 """
 
 from .trace_safety import TraceSafetyRule
@@ -11,6 +18,11 @@ from .sentinel import SentinelDisciplineRule
 from .dtype_discipline import DtypeDisciplineRule
 from .contracts_rule import EngineContractRule
 from .obs_purity import ObsPurityRule
+from .effect_purity import EffectPurityRule
+from .slot_protocol import SLOT_PROTOCOL, SlotProtocolRule
+from .pricer_protocol import PRICER_PROTOCOL, PricerProtocolRule
+from .edgebatch_provenance import EDGEBATCH_PROTOCOL, \
+    EdgeBatchProvenanceRule
 
 ALL_RULES = [
     TraceSafetyRule,
@@ -19,8 +31,21 @@ ALL_RULES = [
     DtypeDisciplineRule,
     EngineContractRule,
     ObsPurityRule,
+    EffectPurityRule,
+    SlotProtocolRule,
+    PricerProtocolRule,
+    EdgeBatchProvenanceRule,
 ]
 
-__all__ = ["ALL_RULES", "TraceSafetyRule", "RngDisciplineRule",
-           "SentinelDisciplineRule", "DtypeDisciplineRule",
-           "EngineContractRule", "ObsPurityRule"]
+#: rule id -> declarative typestate machine (docs table + replay).
+PROTOCOL_RULES = {
+    SLOT_PROTOCOL.rule_id: SLOT_PROTOCOL,
+    PRICER_PROTOCOL.rule_id: PRICER_PROTOCOL,
+    EDGEBATCH_PROTOCOL.rule_id: EDGEBATCH_PROTOCOL,
+}
+
+__all__ = ["ALL_RULES", "PROTOCOL_RULES", "TraceSafetyRule",
+           "RngDisciplineRule", "SentinelDisciplineRule",
+           "DtypeDisciplineRule", "EngineContractRule", "ObsPurityRule",
+           "EffectPurityRule", "SlotProtocolRule", "PricerProtocolRule",
+           "EdgeBatchProvenanceRule"]

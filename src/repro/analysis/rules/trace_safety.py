@@ -4,10 +4,10 @@ A ``float()``/``.item()``/``np.*`` call on a traced value inside a
 ``jax.jit``/``lax.scan``/``lax.fori_loop`` body either fails at trace
 time or — worse — silently constant-folds a value that should be
 data-dependent.  Python ``if``/``while`` on a tracer raises a
-concretization error only on the untested branch shape.  This rule
-also carries two heuristic facets for host-side hot loops:
-per-iteration scalar syncs, and unbatched device→host transfers that
-should be one ``jax.device_get``.
+concretization error only on the untested branch shape.  (The host-
+loop sync heuristics that used to live here moved to the dataflow-
+based ``effect-purity`` rule, which can tell host scalars from device
+values and so no longer needs grandfathering.)
 """
 
 from __future__ import annotations
@@ -54,11 +54,6 @@ class TraceSafetyRule:
         traced = traced_functions(ctx)
         for fn in traced:
             out.extend(self._check_traced_body(ctx, fn))
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                out.extend(self._check_unbatched_transfers(ctx, node))
-                if node not in traced:
-                    out.extend(self._check_loop_syncs(ctx, node))
         return out
 
     # -- facet 1+2+3: inside traced bodies ---------------------------------
@@ -120,87 +115,6 @@ class TraceSafetyRule:
                             f"time; use jnp.{leaf} so it stays in the "
                             f"traced graph"))
         return out
-
-    # -- facet 4: per-iteration scalar syncs in host loops -----------------
-
-    def _check_loop_syncs(self, ctx: FileCtx, fn: ast.AST
-                          ) -> List[Violation]:
-        out: List[Violation] = []
-        for node in body_nodes(fn):
-            if not isinstance(node, (ast.For, ast.While)):
-                continue
-            for sub in ast.walk(node):
-                if not isinstance(sub, ast.Call):
-                    continue
-                flagged = None
-                if isinstance(sub.func, ast.Name) and \
-                        sub.func.id == "float" and sub.args and \
-                        not isinstance(sub.args[0], ast.Constant):
-                    flagged = "float(...)"
-                elif isinstance(sub.func, ast.Attribute):
-                    if sub.func.attr == "item" and not sub.args:
-                        flagged = ".item()"
-                    else:
-                        name = dotted_name(sub.func)
-                        if name in ("np.asarray", "numpy.asarray"):
-                            flagged = "np.asarray(...)"
-                if flagged:
-                    out.append(ctx.violation(
-                        self.id, sub,
-                        f"{flagged} inside a loop in hot function "
-                        f"'{fn.name}': a per-iteration device→host "
-                        f"sync if the operand lives on device; batch "
-                        f"the transfer outside the loop (baseline it "
-                        f"if the operand is host-only)"))
-        return out
-
-    # -- facet 5: unbatched device→host transfers --------------------------
-
-    def _check_unbatched_transfers(self, ctx: FileCtx, fn: ast.AST
-                                   ) -> List[Violation]:
-        out: List[Violation] = []
-        stmts = list(body_nodes(fn))
-        groups: List[tuple] = []  # (assign_node, {names})
-        for node in stmts:
-            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
-                    and isinstance(node.targets[0], ast.Tuple) \
-                    and isinstance(node.value, ast.Call):
-                names = {elt.id for elt in node.targets[0].elts
-                         if isinstance(elt, ast.Name)}
-                if len(names) >= 2:
-                    groups.append((node, names))
-        if not groups:
-            return out
-        sync_counts: Dict[int, Set[str]] = {i: set()
-                                            for i in range(len(groups))}
-        for node in stmts:
-            if not isinstance(node, ast.Call):
-                continue
-            target = None
-            callee = dotted_name(node.func)
-            if callee in ("np.asarray", "numpy.asarray", "np.array",
-                          "numpy.array", "np.copy", "numpy.copy") \
-                    and node.args:
-                target = _base_name(node.args[0])
-            elif isinstance(node.func, ast.Name) and \
-                    node.func.id == "float" and node.args:
-                target = _base_name(node.args[0])
-            if not target:
-                continue
-            for i, (assign, names) in enumerate(groups):
-                if target in names and node.lineno > assign.lineno:
-                    sync_counts[i].add(target)
-        for i, (assign, names) in enumerate(groups):
-            hit = sync_counts[i]
-            if len(hit) >= 2:
-                out.append(ctx.violation(
-                    self.id, assign,
-                    f"{len(hit)} separate host transfers "
-                    f"({', '.join(sorted(hit))}) from one device "
-                    f"computation in '{fn.name}'; fetch them together "
-                    f"with a single jax.device_get((...))"))
-        return out
-
 
 def _param_names(fn: ast.AST) -> Set[str]:
     args = fn.args

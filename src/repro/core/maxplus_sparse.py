@@ -1143,7 +1143,7 @@ class DeltaPricer:
         for k in np.flatnonzero(viol):
             d = int(dst2[k])
             # host numpy throughout: no device sync to batch
-            cand = self._pot[int(src2[k])] + float(wf[k]) - tau  # repro-lint: ignore[trace-safety]
+            cand = self._pot[int(src2[k])] + float(wf[k]) - tau  # repro-lint: ignore[effect-purity]
             if cand > frontier.get(d, NEG_INF):
                 frontier[d] = cand
         counts: Dict[int, int] = {}
@@ -1165,7 +1165,7 @@ class DeltaPricer:
                     k = moved_slots.get(int(slot))
                     if k is not None:
                         continue
-                    wv = float(cur_w[slot])  # repro-lint: ignore[trace-safety]
+                    wv = float(cur_w[slot])  # repro-lint: ignore[effect-purity]
                     if missing_mask(wv):
                         continue
                     v = int(cur_dst[slot])
@@ -1175,7 +1175,7 @@ class DeltaPricer:
                 for k, slot in ((k, s) for s, k in moved_slots.items()):
                     if int(src2[k]) != u:
                         continue
-                    wv = float(wf[k])  # repro-lint: ignore[trace-safety]
+                    wv = float(wf[k])  # repro-lint: ignore[effect-purity]
                     if missing_mask(wv):
                         continue
                     v = int(dst2[k])

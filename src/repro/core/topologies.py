@@ -1149,7 +1149,7 @@ def search_overlays_delta(
             continue
         a, b = index[i], index[j]
         # host dict of python floats: nothing here touches a device
-        latd[(a, b)] = (float(l), float(gc.available_bw_gbps[(i, j)]))  # repro-lint: ignore[trace-safety]
+        latd[(a, b)] = (float(l), float(gc.available_bw_gbps[(i, j)]))  # repro-lint: ignore[effect-purity]
         nbr[a].append(b)
     nbrs = [
         np.array(v, dtype=np.int64) if v else np.empty(0, dtype=np.int64)
@@ -1195,7 +1195,7 @@ def search_overlays_delta(
         best = _delta_climb_one(
             n, slots, arcs0, latd, nbrs, arc_w, comp, delta_max,
             int(n_steps), rng, pricing, int(reanchor_every),
-            float(sa_t0), float(sa_t1), totals,  # repro-lint: ignore[trace-safety]
+            float(sa_t0), float(sa_t1), totals,  # repro-lint: ignore[effect-purity]
         )
         if best is not None:
             candidates.append(best)
@@ -1486,8 +1486,8 @@ def cluster_silos(
         if i == j:
             continue
         a, b = index[i], index[j]
-        D[a, b] = min(D[a, b], float(l))  # repro-lint: ignore[trace-safety]
-        D[b, a] = min(D[b, a], float(l))  # repro-lint: ignore[trace-safety]
+        D[a, b] = min(D[a, b], float(l))  # repro-lint: ignore[effect-purity]
+        D[b, a] = min(D[b, a], float(l))  # repro-lint: ignore[effect-purity]
     rng = np.random.default_rng(seed)
     meds = [int(rng.integers(n))]
     dmin = D[meds[0]].copy()
@@ -1528,7 +1528,7 @@ def _cluster_medoid(gc: ConnectivityGraph, members: Sequence[Node]) -> Node:
                 continue
             la = gc.latency_ms.get((a, b))
             lb = gc.latency_ms.get((b, a))
-            tot += ((float(la) + float(lb))  # repro-lint: ignore[trace-safety]
+            tot += ((float(la) + float(lb))  # repro-lint: ignore[effect-purity]
                     if la is not None and lb is not None else 1e9)
         if best is None or tot < best[0]:
             best = (tot, k)
@@ -1689,8 +1689,8 @@ def search_overlays_hierarchical(
         for a in A:
             for b in B:
                 if gc.has_edge(a, b) and gc.has_edge(b, a):
-                    c = (float(gc.latency_ms[(a, b)])  # repro-lint: ignore[trace-safety]
-                         + float(gc.latency_ms[(b, a)]))  # repro-lint: ignore[trace-safety]
+                    c = (float(gc.latency_ms[(a, b)])  # repro-lint: ignore[effect-purity]
+                         + float(gc.latency_ms[(b, a)]))  # repro-lint: ignore[effect-purity]
                     if best_pair is None or c < best_pair[0]:
                         best_pair = (c, a, b)
         if best_pair is None:

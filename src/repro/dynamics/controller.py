@@ -795,22 +795,40 @@ class OnlineTopologyController:
         elapsed = time.perf_counter() - t0
         label = f"round{self._round}:{name}"
         if self.schedule_slot is not None:
-            self.schedule_slot.swap_schedule(
-                best_sched,
-                label=label,
-                # on a membership event the schedule spans a different
-                # universe: re-pin the label -> mesh-position order
-                silos=tuple(self.gc.silos) if membership is not None else None,
-            )
-            if self.recorder is not None:
-                self.recorder.emit(
-                    "swap",
-                    slot="schedule",
-                    version=self.schedule_slot.version,
+            # Re-pinning the label -> mesh-position order (silos=...) is
+            # only sound when the MembershipSlot swap above published the
+            # new universe to the training loop; without one the mesh
+            # axis is sized at launch and cannot follow.
+            resize = membership is not None and self.membership_slot is not None
+            if resize or len(self.gc.silos) == self.schedule_slot.plan.n_silos:
+                self.schedule_slot.swap_schedule(
+                    best_sched,
                     label=label,
+                    silos=tuple(self.gc.silos) if resize else None,
                 )
-            if plan is None:
-                plan = self.schedule_slot.plan
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        "swap",
+                        slot="schedule",
+                        version=self.schedule_slot.version,
+                        label=label,
+                        resized=resize,
+                    )
+                if plan is None:
+                    plan = self.schedule_slot.plan
+            else:
+                # Churn changed the silo count but no MembershipSlot can
+                # tell the training loop to rebuild; keep the running
+                # schedule and leave an audit note (same discipline as
+                # the plan slot below).
+                self.schedule_slot.history.append(
+                    (
+                        self.schedule_slot.version,
+                        f"{label} NOT swapped ({len(self.gc.silos)} != "
+                        f"{self.schedule_slot.plan.n_silos} silos without "
+                        f"a MembershipSlot)",
+                    )
+                )
         if self.plan_slot is not None:
             if best is None:
                 # The fixed-plan slot cannot follow a plan *distribution*;
@@ -831,6 +849,7 @@ class OnlineTopologyController:
                         slot="plan",
                         version=self.plan_slot.version,
                         label=label,
+                        resized=False,
                     )
             elif membership is not None and self.membership_slot is not None:
                 # Elastic membership: the MembershipSlot swap above (this
@@ -844,6 +863,7 @@ class OnlineTopologyController:
                         slot="plan",
                         version=self.plan_slot.version,
                         label=label,
+                        resized=True,
                     )
             else:
                 # Churn changed the silo count but without a

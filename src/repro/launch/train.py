@@ -468,18 +468,21 @@ def main() -> int:
                         ni = {v: k for k, v in enumerate(new_active)}
                         survivors = [v for v in new_active if v in oi]
                         srows = [oi[v] for v in survivors]
-                        olds = jax.tree_util.tree_leaves(old_params)
-                        news = jax.tree_util.tree_leaves(new_params)
+                        # leaves are host already (device_get above):
+                        # asarray is a view, not a transfer
+                        olds = [np.asarray(o) for o in  # repro-lint: ignore[effect-purity]
+                                jax.tree_util.tree_leaves(old_params)]
+                        news = [np.asarray(w) for w in  # repro-lint: ignore[effect-purity]
+                                jax.tree_util.tree_leaves(new_params)]
                         ok_surv = all(
-                            np.array_equal(np.asarray(o)[oi[v]],
-                                           np.asarray(w)[ni[v]])
+                            np.array_equal(o[oi[v]], w[ni[v]])
                             for o, w in zip(olds, news) for v in survivors)
                         ok_join = all(
                             np.array_equal(
-                                np.asarray(o)[srows]
+                                o[srows]
                                 .mean(axis=0, dtype=np.float64)
-                                .astype(np.asarray(o).dtype),
-                                np.asarray(w)[ni[v]])
+                                .astype(o.dtype),
+                                w[ni[v]])
                             for o, w in zip(olds, news) for v in joined)
                         msg += (f", survivors-bit-identical={ok_surv}, "
                                 f"joiners-at-consensus={ok_join}")
@@ -513,7 +516,8 @@ def main() -> int:
                 obs_metrics.gauge("train.recompiles").set(
                     sum(c.count for c in trace_counters))
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-                print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                # intentional sync: ~10 progress lines per run
+                print(f"step {i:4d} loss {float(metrics['loss']):.4f} "  # repro-lint: ignore[effect-purity]
                       f"({time.time()-t0:.1f}s)", flush=True)
     if args.dynamic and controller is not None:
         final = controller.schedule

@@ -1,0 +1,397 @@
+"""Unit tests for repro.analysis.dataflow: CFG shape, reaching
+definitions / def-use chains, and host-origin inference."""
+
+import ast
+import textwrap
+
+import pytest
+
+from repro.analysis.dataflow import (CFG, Entry, analyze_function,
+                                     assigned_names, names_loaded,
+                                     propagate, reaching_definitions)
+
+
+def fn_of(src: str) -> ast.AST:
+    tree = ast.parse(textwrap.dedent(src))
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return node
+    raise AssertionError("no function in snippet")
+
+
+def stmt_at(fn: ast.AST, line_frag: str, src: str) -> ast.stmt:
+    """The CFG statement whose source line contains ``line_frag``."""
+    lines = textwrap.dedent(src).splitlines()
+    cfg = CFG(fn)
+    for stmt in cfg.statements():
+        text = lines[stmt.lineno - 1]
+        if line_frag in text:
+            return stmt
+    raise AssertionError(f"no statement matching {line_frag!r}")
+
+
+# ---------------------------------------------------------------------------
+# CFG construction
+# ---------------------------------------------------------------------------
+
+class TestCFG:
+    def test_straightline(self):
+        fn = fn_of("""
+            def f(x):
+                a = 1
+                b = a + x
+                return b
+            """)
+        cfg = CFG(fn)
+        stmts = cfg.statements()
+        assert len(stmts) == 3
+        ret = stmts[-1]
+        assert cfg.exit in cfg.succs[ret]
+
+    def test_if_joins(self):
+        src = """
+            def f(x):
+                if x:
+                    a = 1
+                else:
+                    a = 2
+                return a
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        ret = stmt_at(fn, "return a", src)
+        # both branch assignments are predecessors of the return
+        preds = cfg.preds[ret]
+        assert len([p for p in preds if isinstance(p, ast.Assign)]) == 2
+
+    def test_loop_back_edge(self):
+        src = """
+            def f(xs):
+                total = 0
+                for x in xs:
+                    total = total + x
+                return total
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        loop = stmt_at(fn, "for x in xs", src)
+        body = stmt_at(fn, "total = total + x", src)
+        assert loop in cfg.succs[body]      # back edge
+        ret = stmt_at(fn, "return total", src)
+        assert ret in cfg.succs[loop]       # zero-iteration exit
+
+    def test_while_break_reaches_after(self):
+        src = """
+            def f(x):
+                while x:
+                    if x > 3:
+                        break
+                    x = x - 1
+                return x
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        brk = stmt_at(fn, "break", src)
+        ret = stmt_at(fn, "return x", src)
+        assert ret in cfg.succs[brk]
+
+    def test_continue_targets_loop_header(self):
+        src = """
+            def f(xs):
+                for x in xs:
+                    if x < 0:
+                        continue
+                    use(x)
+                return xs
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        cont = stmt_at(fn, "continue", src)
+        loop = stmt_at(fn, "for x in xs", src)
+        assert cfg.succs[cont] == {loop}
+
+    def test_return_is_terminal(self):
+        src = """
+            def f(x):
+                if x:
+                    return 1
+                return 2
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        r1 = stmt_at(fn, "return 1", src)
+        assert cfg.succs[r1] == {cfg.exit}
+
+    def test_try_except_edges(self):
+        src = """
+            def f(x):
+                try:
+                    a = risky(x)
+                    b = a + 1
+                except ValueError:
+                    b = 0
+                return b
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        handler_assign = stmt_at(fn, "b = 0", src)
+        risky = stmt_at(fn, "a = risky(x)", src)
+        # any try-body statement may raise into the handler
+        assert handler_assign in cfg.succs[risky]
+        ret = stmt_at(fn, "return b", src)
+        assert ret in cfg.succs[handler_assign]
+
+    def test_finally_on_all_paths(self):
+        src = """
+            def f(x):
+                try:
+                    a = risky(x)
+                except ValueError:
+                    a = 0
+                finally:
+                    log(a)
+                return a
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        fin = stmt_at(fn, "log(a)", src)
+        ret = stmt_at(fn, "return a", src)
+        assert ret in cfg.succs[fin]
+        # both the body exit and the handler exit flow through finally
+        assert len(cfg.preds[fin]) >= 2
+
+    def test_nested_def_is_opaque(self):
+        src = """
+            def f(x):
+                def g(y):
+                    return y + 1
+                return g(x)
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+        # the inner return belongs to g's CFG, not f's
+        inner_returns = [s for s in cfg.statements()
+                         if isinstance(s, ast.Return)
+                         and "y + 1" in ast.unparse(s)]
+        assert inner_returns == []
+
+
+# ---------------------------------------------------------------------------
+# assigned/loaded names
+# ---------------------------------------------------------------------------
+
+class TestNames:
+    def test_tuple_unpack(self):
+        stmt = ast.parse("a, (b, c) = f()").body[0]
+        assert assigned_names(stmt) == {"a", "b", "c"}
+
+    def test_walrus(self):
+        stmt = ast.parse("y = (n := len(xs)) + 1").body[0]
+        assert assigned_names(stmt) == {"y", "n"}
+
+    def test_for_target(self):
+        stmt = ast.parse("for k, v in d.items():\n    pass").body[0]
+        assert assigned_names(stmt) == {"k", "v"}
+
+    def test_comprehension_locals_not_loaded(self):
+        stmt = ast.parse("out = [x * s for x in xs]").body[0]
+        loaded = names_loaded(stmt)
+        assert "x" not in loaded
+        assert {"xs", "s"} <= loaded
+
+    def test_augassign_reads_target(self):
+        stmt = ast.parse("total += x").body[0]
+        assert "total" in names_loaded(stmt)
+
+
+# ---------------------------------------------------------------------------
+# reaching definitions / def-use
+# ---------------------------------------------------------------------------
+
+class TestReachingDefs:
+    def test_kill_on_rebind(self):
+        src = """
+            def f(p):
+                a = 1
+                a = 2
+                return a
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        ret = stmt_at(fn, "return a", src)
+        defs = an.defs_of("a", ret)
+        assert len(defs) == 1
+        assert "2" in ast.unparse(next(iter(defs)))
+
+    def test_branch_defs_merge(self):
+        src = """
+            def f(p):
+                if p:
+                    a = 1
+                else:
+                    a = 2
+                return a
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        ret = stmt_at(fn, "return a", src)
+        assert len(an.defs_of("a", ret)) == 2
+
+    def test_loop_carried_def_reaches_header(self):
+        src = """
+            def f(xs):
+                total = 0
+                for x in xs:
+                    total = total + x
+                return total
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        body = stmt_at(fn, "total = total + x", src)
+        defs = an.defs_of("total", body)
+        # both the init and the loop-carried def reach the body
+        assert len(defs) == 2
+
+    def test_param_defined_at_entry(self):
+        src = """
+            def f(p):
+                return p
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        ret = stmt_at(fn, "return p", src)
+        defs = an.defs_of("p", ret)
+        assert len(defs) == 1
+        assert isinstance(next(iter(defs)), Entry)
+
+    def test_except_handler_sees_partial_defs(self):
+        src = """
+            def f(x):
+                a = 0
+                try:
+                    a = risky(x)
+                except ValueError:
+                    b = a
+                return a
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        handler = stmt_at(fn, "b = a", src)
+        # the raise may happen before OR after `a = risky(x)` ran
+        assert len(an.defs_of("a", handler)) == 2
+
+    def test_chains_cover_all_loads(self):
+        src = """
+            def f(p):
+                a = p + 1
+                return a
+            """
+        fn = fn_of(src)
+        an = analyze_function(fn)
+        chains = an.chains()
+        keys = {var for (_, var) in chains}
+        assert {"p", "a"} <= keys
+
+
+# ---------------------------------------------------------------------------
+# host-origin inference
+# ---------------------------------------------------------------------------
+
+def host_of(src: str, frag: str) -> bool:
+    """host_only() of the first call whose source contains ``frag``."""
+    fn = fn_of(src)
+    an = analyze_function(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and frag in ast.unparse(node):
+            return an.host_only(node)
+    raise AssertionError(f"no call matching {frag!r}")
+
+
+class TestHostOrigin:
+    def test_rng_scalar_is_host(self):
+        assert host_of("""
+            def f(seed):
+                rng = np.random.default_rng(seed)
+                return float(rng.uniform())
+            """, "float(")
+
+    def test_param_is_not_host(self):
+        assert not host_of("""
+            def f(x):
+                return float(x)
+            """, "float(")
+
+    def test_unknown_call_is_not_host(self):
+        assert not host_of("""
+            def f(step, x):
+                y = step(x)
+                return float(y)
+            """, "float(y)")
+
+    def test_np_call_chain_is_host(self):
+        assert host_of("""
+            def f(xs):
+                a = np.array(xs, dtype=np.float64, copy=True)
+                coeff = a.min()
+                return float(coeff)
+            """, "float(coeff)")
+
+    def test_loop_carried_host_var_stays_host(self):
+        assert host_of("""
+            def f(n):
+                total = 0.0
+                for i in range(n):
+                    total = total + 1.5
+                return float(total)
+            """, "float(total)")
+
+    def test_mixed_branch_is_not_host(self):
+        assert not host_of("""
+            def f(p, flag):
+                if flag:
+                    v = 1.0
+                else:
+                    v = p
+                return float(v)
+            """, "float(v)")
+
+    def test_comprehension_over_host_iter_is_host(self):
+        assert host_of("""
+            def f(n):
+                xs = [i * 2 for i in range(n)]
+                return sum(xs)
+            """, "sum(")
+
+
+# ---------------------------------------------------------------------------
+# generic propagate driver
+# ---------------------------------------------------------------------------
+
+class TestPropagate:
+    def test_fixpoint_over_loop(self):
+        src = """
+            def f(n):
+                x = 0
+                while x < n:
+                    x = x + 1
+                return x
+            """
+        fn = fn_of(src)
+        cfg = CFG(fn)
+
+        # abstract state: set of assignment linenos seen on some path
+        def transfer(node, state):
+            if isinstance(node, ast.Assign):
+                return state | {node.lineno}
+            return state
+
+        def join(states):
+            out = frozenset()
+            for s in states:
+                out |= s
+            return out
+
+        in_states = propagate(cfg, frozenset(), transfer, join)
+        ret = stmt_at(fn, "return x", src)
+        # both the init and the loop body assignment reach the return
+        assert len(in_states[ret]) == 2

@@ -1,0 +1,168 @@
+"""The lint CLI's incremental machinery: the hash-keyed result cache,
+git-diff file selection (--changed), and the annotations output format.
+Each test builds a throwaway repo root so the project baseline and
+cache are never touched."""
+
+import json
+import os
+import subprocess
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import changed_paths, main
+
+CLEAN = textwrap.dedent("""
+    def add(a, b):
+        return a + b
+    """)
+
+BAD = textwrap.dedent("""
+    import numpy as np
+
+    def bad(xs):
+        np.random.seed(0)
+        return xs
+    """)
+
+
+def make_root(tmp_path, files):
+    root = tmp_path / "proj"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    (root / "scripts").mkdir(exist_ok=True)
+    (root / "scripts" / "lint_baseline.txt").write_text("")
+    return root
+
+
+def run_cli(root, *extra):
+    return main(["--root", str(root), *extra])
+
+
+class TestCache:
+    def test_second_run_hits_cache(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN})
+        assert run_cli(root) == 0
+        first = capsys.readouterr().out
+        assert "1 checked, 0 cached" in first
+        assert run_cli(root) == 0
+        second = capsys.readouterr().out
+        assert "0 checked, 1 cached" in second
+        assert (root / ".repro_lint_cache.json").exists()
+
+    def test_edit_invalidates_only_that_file(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN,
+                                    "src/repro/core/b.py": CLEAN})
+        run_cli(root)
+        capsys.readouterr()
+        (root / "src/repro/core/b.py").write_text(CLEAN + "\nX = 1\n")
+        run_cli(root)
+        assert "1 checked, 1 cached" in capsys.readouterr().out
+
+    def test_cached_violations_replayed(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": BAD})
+        assert run_cli(root, "--no-baseline") == 1
+        fresh = capsys.readouterr().out
+        assert "rng-discipline" in fresh
+        # the cache hit must reproduce the violation, not swallow it
+        assert run_cli(root, "--no-baseline") == 1
+        replayed = capsys.readouterr().out
+        assert "rng-discipline" in replayed
+        assert "1 cached" in replayed
+
+    def test_corrupt_cache_is_ignored(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN})
+        (root / ".repro_lint_cache.json").write_text("{not json")
+        assert run_cli(root) == 0
+        assert "1 checked" in capsys.readouterr().out
+
+    def test_no_cache_flag(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN})
+        run_cli(root, "--no-cache")
+        capsys.readouterr()
+        assert not (root / ".repro_lint_cache.json").exists()
+        run_cli(root, "--no-cache")
+        assert "1 checked, 0 cached" in capsys.readouterr().out
+
+
+def git(root, *argv):
+    return subprocess.run(["git", "-C", str(root), *argv],
+                          capture_output=True, text=True, check=True,
+                          env={**os.environ,
+                               "GIT_AUTHOR_NAME": "t",
+                               "GIT_AUTHOR_EMAIL": "t@t",
+                               "GIT_COMMITTER_NAME": "t",
+                               "GIT_COMMITTER_EMAIL": "t@t"})
+
+
+@pytest.fixture
+def git_root(tmp_path):
+    root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN,
+                                "src/repro/core/b.py": CLEAN})
+    git(root, "init", "-q", "-b", "main")
+    git(root, "add", "-A")
+    git(root, "commit", "-qm", "seed")
+    return root
+
+
+class TestChanged:
+    def test_clean_tree_reports_nothing_changed(self, git_root):
+        assert changed_paths(str(git_root), base="main") == []
+
+    def test_edited_and_untracked_files_selected(self, git_root):
+        (git_root / "src/repro/core/b.py").write_text(CLEAN + "\nY = 2\n")
+        (git_root / "src/repro/core/new.py").write_text(CLEAN)
+        (git_root / "notes.txt").write_text("not python")
+        assert changed_paths(str(git_root), base="main") == [
+            "src/repro/core/b.py", "src/repro/core/new.py"]
+
+    def test_changed_mode_flags_only_changed_files(self, git_root,
+                                                   capsys):
+        # a pre-existing violation in an UNCHANGED file must not fail a
+        # --changed run; one in the changed file must
+        (git_root / "src/repro/core/a.py").write_text(BAD)
+        git(git_root, "add", "-A")
+        git(git_root, "commit", "-qm", "bad a")
+        git(git_root, "checkout", "-qb", "feature")
+        (git_root / "src/repro/core/b.py").write_text(CLEAN + "\nZ = 3\n")
+        assert run_cli(git_root, "--changed", "--base", "main",
+                       "--no-baseline") == 0
+        assert "1 changed" in capsys.readouterr().out
+        (git_root / "src/repro/core/b.py").write_text(BAD)
+        assert run_cli(git_root, "--changed", "--base", "main",
+                       "--no-baseline") == 1
+        out = capsys.readouterr().out
+        assert "b.py" in out and "a.py" not in out
+
+    def test_no_merge_base_falls_back_to_full(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": CLEAN})
+        # not a git repo: --changed warns and lints everything
+        assert run_cli(root, "--changed") == 0
+        captured = capsys.readouterr()
+        assert "falling back to a full lint" in captured.err
+        assert "1 checked" in captured.out
+
+    def test_update_baseline_refused_with_changed(self, git_root,
+                                                  capsys):
+        assert run_cli(git_root, "--changed", "--base", "main",
+                       "--update-baseline") == 2
+        assert "refusing" in capsys.readouterr().err
+
+
+class TestAnnotations:
+    def test_annotation_format(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": BAD})
+        assert run_cli(root, "--no-baseline",
+                       "--format=annotations") == 1
+        out = capsys.readouterr().out
+        assert "::error file=src/repro/core/a.py,line=" in out
+        assert "[rng-discipline]" in out
+
+    def test_text_format_is_default(self, tmp_path, capsys):
+        root = make_root(tmp_path, {"src/repro/core/a.py": BAD})
+        run_cli(root, "--no-baseline")
+        out = capsys.readouterr().out
+        assert "::error" not in out
+        assert "src/repro/core/a.py:" in out

@@ -137,6 +137,7 @@ class TestTraceSafety:
         assert "trace-safety" not in rules_of(vs)
 
     def test_per_iteration_sync_in_host_loop(self):
+        # moved to the dataflow-based effect-purity rule in PR 10
         vs = run("""
             def drive(fn, xs):
                 out = []
@@ -144,10 +145,25 @@ class TestTraceSafety:
                     out.append(float(fn(x)))
                 return out
             """)
-        assert any(v.rule == "trace-safety" and "loop" in v.message
+        assert any(v.rule == "effect-purity" and "loop" in v.message
                    for v in vs)
 
+    def test_host_origin_loop_scalar_is_clean(self):
+        # the dataflow refinement: rng-derived floats are host values
+        vs = run("""
+            import numpy as np
+
+            def scenario(seed):
+                rng = np.random.default_rng(seed)
+                out = []
+                for _ in range(8):
+                    out.append(float(rng.uniform()))
+                return out
+            """)
+        assert "effect-purity" not in rules_of(vs)
+
     def test_unbatched_transfers_flagged(self):
+        # moved to the dataflow-based effect-purity rule in PR 10
         vs = run("""
             import numpy as np
 
@@ -157,7 +173,7 @@ class TestTraceSafety:
                 b = np.asarray(b)
                 return a, b, float(tau)
             """)
-        assert any(v.rule == "trace-safety" and "device_get" in v.message
+        assert any(v.rule == "effect-purity" and "device_get" in v.message
                    for v in vs)
 
     def test_cold_path_not_linted_for_trace_safety(self):

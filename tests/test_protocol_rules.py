@@ -1,0 +1,602 @@
+"""Protocol typestate rules: positive/negative snippets per rule, the
+four seeded-injection acceptance tests (mutating real repo files), and
+the runtime cross-check replaying a FlightRecorder churn trace through
+the same slot-ordering machine the static rule interprets."""
+
+import ast
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import LintConfig, lint_source
+from repro.analysis.protocols import Protocol, Replay, ReplayError, \
+    run_protocol
+from repro.analysis.rules import PROTOCOL_RULES
+from repro.analysis.rules.slot_protocol import ORDERING_PROTOCOL, \
+    replay_slot_trace
+
+
+def run(src, path="src/repro/dynamics/snippet.py", config=None,
+        extra_files=None):
+    return lint_source(textwrap.dedent(src), path=path, config=config,
+                       extra_files=extra_files)
+
+
+def rules_of(vs):
+    return {v.rule for v in vs}
+
+
+# ---------------------------------------------------------------------------
+# slot-protocol
+# ---------------------------------------------------------------------------
+
+class TestSlotProtocol:
+    def test_resize_without_membership_swap_flagged(self):
+        vs = run("""
+            def actuate(schedule_slot, sched, gc):
+                schedule_slot.swap_schedule(
+                    sched, label="x", silos=tuple(gc.silos))
+            """)
+        assert any(v.rule == "slot-protocol" and "resizing" in v.message
+                   for v in vs)
+
+    def test_plan_resize_without_membership_swap_flagged(self):
+        vs = run("""
+            def actuate(plan_slot, plan):
+                plan_slot.swap(plan, label="x", allow_resize=True)
+            """)
+        assert any(v.rule == "slot-protocol" and "resizing" in v.message
+                   for v in vs)
+
+    def test_membership_swap_before_resize_is_clean(self):
+        vs = run("""
+            def actuate(membership_slot, plan_slot, plan, active):
+                membership_slot.swap(active, label="churn")
+                plan_slot.swap(plan, label="x", allow_resize=True)
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_branch_correlated_swap_is_clean(self):
+        # the real controller shape: swap guarded on slot presence,
+        # resize on the shared continuation.  One clean path suffices.
+        vs = run("""
+            def actuate(self, plan, active):
+                if self.membership_slot is not None:
+                    self.membership_slot.swap(active, label="churn")
+                self.plan_slot.swap(plan, label="x", allow_resize=True)
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_non_resizing_swap_needs_no_membership(self):
+        vs = run("""
+            def actuate(plan_slot, plan):
+                plan_slot.swap(plan, label="x")
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_literal_false_resize_is_clean(self):
+        vs = run("""
+            def actuate(plan_slot, plan):
+                plan_slot.swap(plan, label="x", allow_resize=False)
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_direct_field_store_flagged(self):
+        vs = run("""
+            def patch(plan_slot, plan):
+                plan_slot.plan = plan
+            """)
+        assert any(v.rule == "slot-protocol" and "bypasses" in v.message
+                   for v in vs)
+
+    def test_version_read_on_fresh_slot_flagged(self):
+        vs = run("""
+            def build(plan):
+                slot = PlanSlot(plan)
+                return slot.version
+            """)
+        assert any(v.rule == "slot-protocol"
+                   and "never-swapped" in v.message for v in vs)
+
+    def test_version_read_after_swap_is_clean(self):
+        vs = run("""
+            def build(plan):
+                slot = PlanSlot(plan)
+                slot.swap(plan, label="init")
+                return slot.version
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_version_read_on_external_slot_is_clean(self):
+        # a slot received as a parameter has unknown swap history
+        vs = run("""
+            def probe(plan_slot):
+                return plan_slot.version
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_escaped_slot_is_not_tracked(self):
+        vs = run("""
+            def build(plan, registry):
+                slot = PlanSlot(plan)
+                registry.register(slot)
+                return slot.version
+            """)
+        assert "slot-protocol" not in rules_of(vs)
+
+    def test_home_module_exempt(self):
+        vs = run("""
+            def swap(self, plan):
+                self.version += 1
+                self.plan = plan
+            """, path="src/repro/fed/gossip.py")
+        assert "slot-protocol" not in rules_of(vs)
+
+
+# ---------------------------------------------------------------------------
+# pricer-protocol
+# ---------------------------------------------------------------------------
+
+class TestPricerProtocol:
+    def test_commit_without_price_flagged(self):
+        vs = run("""
+            def bad(src, dst, w, n, pm):
+                dp = DeltaPricer(src, dst, w, n)
+                dp.commit(pm)
+            """)
+        assert any(v.rule == "pricer-protocol"
+                   and "no live certificate" in v.message for v in vs)
+
+    def test_stale_certificate_commit_flagged(self):
+        vs = run("""
+            def bad(src, dst, w, n, slots, moves):
+                dp = DeltaPricer(src, dst, w, n)
+                pm1 = dp.price(slots, src, dst, w)
+                pm2 = dp.price(slots, src, dst, w)
+                dp.commit(pm1)
+            """)
+        assert any(v.rule == "pricer-protocol" and "stale" in v.message
+                   for v in vs)
+
+    def test_reanchor_invalidates_certificate(self):
+        vs = run("""
+            def bad(src, dst, w, n, slots):
+                dp = DeltaPricer(src, dst, w, n)
+                pm = dp.price(slots, src, dst, w)
+                dp.reanchor()
+                dp.commit(pm)
+            """)
+        assert any(v.rule == "pricer-protocol" and "stale" in v.message
+                   for v in vs)
+
+    def test_price_commit_loop_with_continue_is_clean(self):
+        # the search_overlays_delta shape: re-price each iteration,
+        # commit only accepted moves
+        vs = run("""
+            def climb(src, dst, w, n, slots, moves):
+                dp = DeltaPricer(src, dst, w, n)
+                for m in moves:
+                    pm = dp.price(slots, m.src, m.dst, m.w)
+                    if pm.tau > 100.0:
+                        continue
+                    dp.commit(pm)
+                dp.reanchor()
+            """)
+        assert "pricer-protocol" not in rules_of(vs)
+
+    def test_update_is_self_contained(self):
+        vs = run("""
+            def step(src, dst, w, n, slots):
+                dp = DeltaPricer(src, dst, w, n)
+                dp.update(slots, src, dst, w)
+            """)
+        assert "pricer-protocol" not in rules_of(vs)
+
+    def test_external_pricer_commit_not_flagged(self):
+        # a pricer parameter has unknown history: may hold a live cert
+        vs = run("""
+            def apply(pricer, pm):
+                pricer.commit(pm)
+            """)
+        assert "pricer-protocol" not in rules_of(vs)
+
+    def test_escaped_pricer_not_tracked(self):
+        vs = run("""
+            def bad(src, dst, w, n, helper, pm):
+                dp = DeltaPricer(src, dst, w, n)
+                helper(dp)
+                dp.commit(pm)
+            """)
+        assert "pricer-protocol" not in rules_of(vs)
+
+    def test_schedule_price_is_not_a_pricer(self):
+        # Schedule.price() shares the method name but not the protocol
+        vs = run("""
+            def estimate(schedule, gc, tp):
+                return schedule.price(gc, tp, rounds=100).tau_ms
+            """)
+        assert "pricer-protocol" not in rules_of(vs)
+
+    def test_force_full_literal_flagged_in_src(self):
+        vs = run("""
+            def bad(dp, slots, src, dst, w):
+                return dp.price(slots, src, dst, w, force_full=True)
+            """, path="src/repro/core/thing.py")
+        assert any(v.rule == "pricer-protocol"
+                   and "force_full" in v.message for v in vs)
+
+    def test_force_full_literal_allowed_in_tests_and_benchmarks(self):
+        snippet = """
+            def probe(dp, slots, src, dst, w):
+                return dp.price(slots, src, dst, w, force_full=True)
+            """
+        for path in ("tests/test_thing.py", "benchmarks/bench_thing.py"):
+            vs = run(snippet, path=path)
+            assert "pricer-protocol" not in rules_of(vs), path
+
+    def test_force_full_variable_is_clean(self):
+        vs = run("""
+            def ok(dp, slots, src, dst, w, force_full):
+                return dp.price(slots, src, dst, w,
+                                force_full=force_full)
+            """, path="src/repro/core/thing.py")
+        assert "pricer-protocol" not in rules_of(vs)
+
+
+# ---------------------------------------------------------------------------
+# edgebatch-provenance
+# ---------------------------------------------------------------------------
+
+class TestEdgeBatchProvenance:
+    def test_raw_arith_on_w_flagged(self):
+        vs = run("""
+            def bad(src, dst, w, n):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                return weights + 1.0
+            """)
+        assert any(v.rule == "edgebatch-provenance" for v in vs)
+
+    def test_inline_field_arith_flagged(self):
+        vs = run("""
+            def bad(batch):
+                return batch.w * 2.0
+            """)
+        assert any(v.rule == "edgebatch-provenance" for v in vs)
+
+    def test_reduction_on_raw_field_flagged(self):
+        vs = run("""
+            import numpy as np
+
+            def bad(src, dst, w, n):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                return np.sum(weights)
+            """)
+        assert any(v.rule == "edgebatch-provenance" for v in vs)
+
+    def test_masked_then_arith_is_clean(self):
+        vs = run("""
+            import numpy as np
+
+            def ok(src, dst, w, n):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                mask = missing_mask(weights)
+                total = np.sum(np.where(mask, 0.0, weights))
+                return weights + total
+            """)
+        assert "edgebatch-provenance" not in rules_of(vs)
+
+    def test_branch_masked_on_one_path_is_clean(self):
+        # must-reporting: one masked path keeps the join legal
+        vs = run("""
+            def ok(src, dst, w, n, flag):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                if flag:
+                    missing_mask(weights)
+                return weights + 1.0
+            """)
+        assert "edgebatch-provenance" not in rules_of(vs)
+
+    def test_obligation_transfers_to_callee(self):
+        vs = run("""
+            def ok(src, dst, w, n, engine_fn):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                engine_fn(weights)
+                return weights + 1.0
+            """)
+        assert "edgebatch-provenance" not in rules_of(vs)
+
+    def test_engine_home_exempt(self):
+        vs = run("""
+            def kernel(eb):
+                return eb.w + 0.0
+            """, path="src/repro/core/maxplus_vec.py")
+        assert "edgebatch-provenance" not in rules_of(vs)
+
+    def test_untracked_object_is_clean(self):
+        vs = run("""
+            def ok(graph):
+                return graph.w + 1.0
+            """)
+        assert "edgebatch-provenance" not in rules_of(vs)
+
+
+# ---------------------------------------------------------------------------
+# effect-purity (traced host effects; the loop facets are covered in
+# test_lint_rules.py where they moved from trace-safety)
+# ---------------------------------------------------------------------------
+
+class TestEffectPurityTraced:
+    def test_print_in_jitted_body_flagged(self):
+        vs = run("""
+            import jax
+
+            @jax.jit
+            def step(x):
+                print("step!")
+                return x + 1
+            """)
+        assert any(v.rule == "effect-purity"
+                   and "trace time" in v.message for v in vs)
+
+    def test_clock_in_jax_twin_flagged(self):
+        vs = run("""
+            import time
+
+            def cycle_time_jax(w):
+                t0 = time.perf_counter()
+                return w.max(), t0
+            """)
+        assert any(v.rule == "effect-purity" for v in vs)
+
+    def test_global_write_in_traced_body_flagged(self):
+        vs = run("""
+            import jax
+
+            _CALLS = 0
+
+            @jax.jit
+            def step(x):
+                global _CALLS
+                _CALLS += 1
+                return x
+            """)
+        assert any(v.rule == "effect-purity" and "global" in v.message
+                   for v in vs)
+
+    def test_host_function_may_print(self):
+        vs = run("""
+            def report(x):
+                print(x)
+                return x
+            """)
+        assert "effect-purity" not in rules_of(vs)
+
+
+# ---------------------------------------------------------------------------
+# seeded injections into the real tree (acceptance)
+# ---------------------------------------------------------------------------
+
+def _lint_real(path, appended=""):
+    with open(path, "r", encoding="utf-8") as fh:
+        src = fh.read()
+    return lint_source(src + textwrap.dedent(appended), path=path)
+
+
+class TestSeededInjections:
+    """Mutation tests: each rule catches a violation seeded into the
+    real module it guards, and the unmutated module is clean."""
+
+    def test_clean_tree_has_no_protocol_violations(self):
+        for path in ("src/repro/dynamics/controller.py",
+                     "src/repro/core/topologies.py",
+                     "src/repro/launch/train.py",
+                     "src/repro/dynamics/events.py"):
+            vs = _lint_real(path)
+            fresh = {v.rule for v in vs}
+            assert not (fresh & set(PROTOCOL_RULES)), (path, vs)
+            assert "effect-purity" not in fresh, (path, vs)
+
+    def test_slot_protocol_injection_caught(self):
+        vs = _lint_real("src/repro/dynamics/controller.py", """
+
+            def _injected_bad_resize(schedule_slot, sched, gc):
+                schedule_slot.swap_schedule(
+                    sched, label="bad", silos=tuple(gc.silos))
+            """)
+        hits = [v for v in vs if v.rule == "slot-protocol"]
+        assert len(hits) == 1
+        assert hits[0].func == "_injected_bad_resize"
+
+    def test_pricer_protocol_injection_caught(self):
+        vs = _lint_real("src/repro/core/topologies.py", """
+
+            def _injected_stale_commit(src, dst, w, n, slots):
+                dp = DeltaPricer(src, dst, w, n)
+                pm = dp.price(slots, src, dst, w)
+                dp.reanchor()
+                dp.commit(pm)
+            """)
+        hits = [v for v in vs if v.rule == "pricer-protocol"]
+        assert len(hits) == 1
+        assert hits[0].func == "_injected_stale_commit"
+
+    def test_edgebatch_injection_caught(self):
+        vs = _lint_real("src/repro/dynamics/simulate.py", """
+
+            def _injected_raw_sum(src, dst, w, n):
+                eb = EdgeBatch(src, dst, w, n)
+                weights = eb.w
+                return np.sum(weights)
+            """)
+        hits = [v for v in vs if v.rule == "edgebatch-provenance"]
+        assert len(hits) == 1
+        assert hits[0].func == "_injected_raw_sum"
+
+    def test_effect_purity_injection_caught(self):
+        vs = _lint_real("src/repro/launch/train.py", """
+
+            def _injected_loop_sync(step_fn, xs):
+                out = []
+                for x in xs:
+                    out.append(float(step_fn(x)))
+                return out
+            """)
+        hits = [v for v in vs if v.rule == "effect-purity"]
+        assert len(hits) == 1
+        assert hits[0].func == "_injected_loop_sync"
+
+
+# ---------------------------------------------------------------------------
+# declarative machine + runtime replay
+# ---------------------------------------------------------------------------
+
+class TestReplayMachine:
+    def test_legal_sequence(self):
+        r = Replay(ORDERING_PROTOCOL)
+        for ev in ("membership_swap", "resize", "redesign", "redesign"):
+            r.feed(ev)
+        assert r.state == "idle"
+        assert r.errors == []
+
+    def test_resize_in_idle_raises(self):
+        r = Replay(ORDERING_PROTOCOL)
+        with pytest.raises(ReplayError):
+            r.feed("resize")
+
+    def test_freshness_does_not_survive_redesign(self):
+        r = Replay(ORDERING_PROTOCOL)
+        r.feed("membership_swap")
+        r.feed("redesign")
+        with pytest.raises(ReplayError):
+            r.feed("resize")
+
+    def test_non_strict_collects_errors(self):
+        r = Replay(ORDERING_PROTOCOL)
+        r.feed("resize", strict=False)
+        assert len(r.errors) == 1
+
+    def test_trace_record_mapping(self):
+        bad_trace = [
+            {"kind": "round", "step": 0},
+            {"kind": "swap", "slot": "schedule", "resized": True},
+        ]
+        with pytest.raises(ReplayError):
+            replay_slot_trace(bad_trace)
+        ok_trace = [
+            {"kind": "membership", "step": 3},
+            {"kind": "swap", "slot": "schedule", "resized": True},
+            {"kind": "swap", "slot": "plan", "resized": True},
+            {"kind": "redesign", "step": 3},
+            {"kind": "swap", "slot": "plan"},  # pre-PR10 record: no field
+        ]
+        r = replay_slot_trace(ok_trace)
+        assert r.errors == []
+
+
+def _churn_trace(tmp_path, with_membership_slot):
+    """Drive a real churn scenario through the controller with a
+    FlightRecorder attached; return the validated records."""
+    import repro.core as C
+    from repro.core.delays import TrainingParams
+    from repro.dynamics import (ControllerConfig, DynamicTimeline,
+                                OnlineTopologyController, active_subgraph,
+                                churn_scenario)
+    from repro.fed.gossip import MembershipSlot, PlanSlot, ScheduleSlot
+    from repro.fed.topology_runtime import plan_from_overlay
+    from repro.obs.events import FlightRecorder, validate_trace
+
+    M, Tc = C.WORKLOADS["inaturalist"]
+    u = C.make_underlay("gaia")
+    gc = u.connectivity_graph(comp_time_ms=Tc)
+    tp = TrainingParams(model_size_mbits=M, local_steps=1)
+    ring = C.design_overlay("ring", gc, tp)
+    tau = ring.cycle_time_ms
+    sc = churn_scenario(u, Tc, silo=5, t_leave_ms=20 * tau,
+                        t_rejoin_ms=50 * tau, horizon_ms=200 * tau)
+    timeline = DynamicTimeline(sc, tp)
+    timeline.set_overlay(ring.edges)
+    plan_slot = PlanSlot(plan_from_overlay(ring, gc.num_silos))
+    mem = (MembershipSlot(range(u.num_silos), u.num_silos)
+           if with_membership_slot else None)
+    trace = str(tmp_path / "churn.jsonl")
+    with FlightRecorder(trace, silo_names=list(gc.silos)) as rec:
+        controller = OnlineTopologyController(
+            gc, tp, ring,
+            config=ControllerConfig(seed=0, rewire_restarts=0),
+            connectivity_provider=lambda: active_subgraph(
+                timeline.current_epoch().gc,
+                timeline.current_epoch().active),
+            plan_slot=plan_slot,
+            membership_slot=mem,
+            membership_provider=timeline.current_active,
+            recorder=rec,
+            silo_names=list(gc.silos),
+        )
+        for _ in range(150):
+            rd = controller.observe_round(timeline.step())
+            if rd is not None:
+                timeline.set_overlay(rd.overlay.edges)
+    records, problems = validate_trace(trace)
+    assert problems == []
+    return records
+
+
+@pytest.mark.slow  # full churn simulation: ci.sh --fast skips
+class TestRuntimeCrossCheck:
+    def test_churn_trace_replays_clean_and_static_agrees(self, tmp_path):
+        """The instrumented churn run's trace satisfies the slot
+        machine, and the static verdict on the controller module agrees
+        (no slot-protocol violations in the code that produced it)."""
+        records = _churn_trace(tmp_path, with_membership_slot=True)
+        resizes = [r for r in records
+                   if r.get("kind") == "swap" and r.get("resized")]
+        assert resizes, "scenario produced no resizing swap"
+        replay = replay_slot_trace(records)
+        assert replay.errors == []
+        # static side of the cross-check
+        vs = _lint_real("src/repro/dynamics/controller.py")
+        assert not any(v.rule == "slot-protocol" for v in vs)
+
+    def test_no_membership_slot_churn_never_resizes(self, tmp_path):
+        """Without a MembershipSlot the controller must take the
+        audit-note path instead of resizing — the trace stays
+        protocol-clean by *not* containing a resize, which is exactly
+        the runtime shadow of the static audit-note fix."""
+        records = _churn_trace(tmp_path, with_membership_slot=False)
+        assert not any(r.get("kind") == "swap" and r.get("resized")
+                       for r in records)
+        replay = replay_slot_trace(records)
+        assert replay.errors == []
+
+
+# ---------------------------------------------------------------------------
+# machine registry sanity
+# ---------------------------------------------------------------------------
+
+class TestProtocolRegistry:
+    def test_registered_machines_are_well_formed(self):
+        assert set(PROTOCOL_RULES) == {"slot-protocol", "pricer-protocol",
+                                       "edgebatch-provenance"}
+        for rule_id, proto in PROTOCOL_RULES.items():
+            assert isinstance(proto, Protocol)
+            assert proto.rule_id == rule_id
+            assert proto.states
+            assert proto.home
+            assert proto.errors
+            # every error state is a declared state
+            for (state, _event) in proto.errors:
+                assert state in proto.states + (proto.hint_initial,)
+
+    def test_run_protocol_module_level_code(self):
+        # module-level statements are a degenerate "function" body
+        tree = ast.parse(textwrap.dedent("""
+            slot = PlanSlot(plan)
+            v = slot.version
+            """))
+        findings = run_protocol(PROTOCOL_RULES["slot-protocol"], tree)
+        assert len(findings) == 1

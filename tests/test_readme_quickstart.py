@@ -88,3 +88,36 @@ def test_docs_obs_schema_in_sync():
         f"repro.obs.events.SCHEMA: undocumented={set(SCHEMA) - documented}, "
         f"stale={documented - set(SCHEMA)}"
     )
+
+
+def test_docs_protocol_table_in_sync():
+    """The 'Protocol machines' table in docs/architecture.md must match
+    the registered typestate machines exactly, in both directions:
+    every registered protocol documented, every documented row backed
+    by a machine, and the states / error-transition / contract cells
+    equal to ``protocol_table_row`` of the live declaration."""
+    from repro.analysis.protocols import protocol_table_row
+    from repro.analysis.rules import PROTOCOL_RULES
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    m = re.search(r"### Protocol machines.*?(?=\n## |\n### |\Z)", text,
+                  flags=re.DOTALL)
+    assert m, "docs/architecture.md has no 'Protocol machines' table"
+    section = m.group(0)
+    documented = {}
+    for row in re.finditer(
+            r"^\| `([\w-]+)` \| ([^|]+) \| ([^|]+) \| ([^|]+) \|",
+            section, flags=re.M):
+        rule_id, states, errors, desc = (c.strip() for c in row.groups())
+        documented[rule_id] = (rule_id, states, errors, desc)
+    registered = {rid: protocol_table_row(proto)
+                  for rid, proto in PROTOCOL_RULES.items()}
+    assert set(documented) == set(registered), (
+        f"protocol table out of sync: "
+        f"undocumented={set(registered) - set(documented)}, "
+        f"stale={set(documented) - set(registered)}")
+    for rid in registered:
+        assert documented[rid] == registered[rid], (
+            f"protocol table row for {rid} differs from the live "
+            f"machine:\n  docs: {documented[rid]}\n"
+            f"  code: {registered[rid]}")
